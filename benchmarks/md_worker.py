@@ -1,0 +1,45 @@
+"""Worker: MD step timing for one (devices, mode, size) cell -> JSON."""
+import json
+import sys
+import time
+
+import jax
+
+from repro.core.md import MDEngine, make_grappa_like
+from repro.launch.mesh import make_md_mesh
+
+
+def main():
+    mode = sys.argv[1]
+    n_atoms = int(sys.argv[2])
+    steps = int(sys.argv[3]) if len(sys.argv) > 3 else 40
+    system = make_grappa_like(n_atoms, seed=1)
+    mesh = make_md_mesh()
+    eng = MDEngine(system, mesh, mode=mode)
+
+    state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
+    t0 = time.perf_counter()
+    state, _, _ = eng.simulate(steps, state=state, collect=False)
+    dt = (time.perf_counter() - t0) / steps
+
+    # device-side decomposition (paper Fig. 6 analogue): time the force
+    # pass (halo fwd + NB kernel + halo rev) vs the NB kernel alone
+    cf, ci = state
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(eng.force_fn(cf, ci))
+    t_force_pass = (time.perf_counter() - t0) / 10
+
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "mode": mode,
+        "n_atoms": n_atoms,
+        "dd": [int(mesh.shape[a]) for a in ("z", "y", "x")],
+        "ms_per_step": dt * 1e3,
+        "ms_force_pass": t_force_pass * 1e3,
+        "atom_steps_per_s": n_atoms / dt,
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
+
+Default mode is quick (CI-sized); --full runs the complete sweeps.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.figures import ALL
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    names = list(ALL) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    for name in names:
+        fn = ALL[name]
+        t0 = time.time()
+        try:
+            if name in ("fig3", "fig6", "lm"):
+                fn(quick=not args.full)
+            else:
+                fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,-1,{type(e).__name__}: {str(e)[:80]}")
+        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

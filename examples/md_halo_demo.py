@@ -1,0 +1,30 @@
+"""Strong-scaling flavor demo: serialized vs fused halo wall-clock.
+
+Mirrors the paper's Fig. 3 axis (same system, more domains) at laptop
+scale: run with increasing virtual-device counts and compare step times.
+
+  for n in 1 2 4 8; do
+    XLA_FLAGS=--xla_force_host_platform_device_count=$n \
+        PYTHONPATH=src python examples/md_halo_demo.py
+  done
+"""
+import time
+
+import jax
+
+from repro.core.md import MDEngine, make_grappa_like
+from repro.launch.mesh import make_md_mesh
+
+system = make_grappa_like(2400, seed=1)
+mesh = make_md_mesh()
+n_dev = len(jax.devices())
+print(f"{n_dev} devices -> DD grid {dict(mesh.shape)}")
+
+for mode in ("serialized", "fused"):
+    eng = MDEngine(system, mesh, mode=mode)
+    state, _, _ = eng.simulate(4, collect=False)         # warmup + compile
+    t0 = time.time()
+    state, metrics, _ = eng.simulate(40, state=state)
+    dt = (time.time() - t0) / 40
+    print(f"{mode:11s}: {dt * 1e3:7.2f} ms/step "
+          f"({system.n_atoms / dt / 1e6:.2f} Matom-steps/s)")

@@ -1,0 +1,132 @@
+"""Emit the EXPERIMENTS.md tables from results/dryrun/*.json."""
+import json
+import sys
+from pathlib import Path
+
+DRY = Path(__file__).parent / "dryrun"
+
+
+def load(name):
+    p = DRY / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def fmt_cell(r):
+    if r is None:
+        return None
+    if r.get("skipped"):
+        return {"status": r["skipped"]}
+    if not r["ok"]:
+        return {"status": "FAIL: " + r.get("error", "")[:40]}
+    t = r["roofline"]
+    return {
+        "status": "ok",
+        "gb": r["device_total_bytes"] / 1e9,
+        "fits": r["device_total_bytes"] / 1e9 <= 16.0,
+        "flops": r["parsed"]["flops"],
+        "bytes": r["parsed"]["bytes"],
+        "coll": r["parsed"]["collective_bytes"],
+        "ct": t["compute_s"], "mt": t["memory_s"], "lt": t["collective_s"],
+        "mlb": t.get("memory_lb_s", 0), "dom": t["dominant"],
+        "doma": t.get("dominant_analytic", "?"),
+        "frac": t.get("roofline_fraction", 0),
+        "fraca": t.get("roofline_fraction_analytic", 0),
+        "mb": r.get("microbatches"),
+        "compile": r.get("compile_s", 0) + r.get("lower_s", 0),
+    }
+
+
+ARCHS = ["internvl2_26b", "mistral_nemo_12b", "command_r_plus_104b",
+         "qwen3_1_7b", "starcoder2_7b", "whisper_small", "olmoe_1b_7b",
+         "llama4_maverick_400b_a17b", "rwkv6_3b", "jamba_v0_1_52b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table(mesh):
+    print(f"\n### {mesh} mesh\n")
+    print("| arch | shape | status | GB/dev | fits 16GB | compile s |")
+    print("|---|---|---|---|---|---|")
+    n_ok = n_skip = 0
+    for a in ARCHS:
+        for s in SHAPES:
+            c = fmt_cell(load(f"{a}__{s}__{mesh}"))
+            if c is None:
+                print(f"| {a} | {s} | MISSING | | | |")
+                continue
+            if c["status"] != "ok":
+                n_skip += 1
+                print(f"| {a} | {s} | {c['status']} | | | |")
+                continue
+            n_ok += 1
+            print(f"| {a} | {s} | ok | {c['gb']:.2f} | "
+                  f"{'yes' if c['fits'] else 'NO'} | {c['compile']:.0f} |")
+    print(f"\n{n_ok} compiled OK, {n_skip} assignment skips.")
+
+
+def roofline_table():
+    print("\n| arch | shape | flops/dev | coll B/dev | compute s | "
+          "memory s (hlo) | memory s (lb) | coll s | dom (hlo/lb) | "
+          "frac | frac(lb) |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            c = fmt_cell(load(f"{a}__{s}__single"))
+            if c is None or c["status"] != "ok":
+                st = c["status"] if c else "missing"
+                print(f"| {a} | {s} | {st} |" + " |" * 9)
+                continue
+            print(f"| {a} | {s} | {c['flops']:.2e} | {c['coll']:.2e} | "
+                  f"{c['ct']:.2e} | {c['mt']:.2e} | {c['mlb']:.2e} | "
+                  f"{c['lt']:.2e} | {c['dom']}/{c['doma']} | "
+                  f"{c['frac']:.3f} | {c['fraca']:.3f} |")
+
+
+def variants_table(cells):
+    print("\n| cell | variant | coll B/dev | compute s | memory s (hlo) | "
+          "coll s | GB/dev | frac(lb) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for base, tags in cells:
+        for tag, label in tags:
+            c = fmt_cell(load(base + tag))
+            if c is None or c.get("status") != "ok":
+                print(f"| {base} | {label} | "
+                      f"{(c or {}).get('status', 'missing')} |" + " |" * 6)
+                continue
+            print(f"| {base.split('__')[0]}/{base.split('__')[1]} | "
+                  f"{label} | {c['coll']:.3e} | {c['ct']:.2e} | "
+                  f"{c['mt']:.2e} | {c['lt']:.3e} | {c['gb']:.2f} | "
+                  f"{c['fraca']:.4f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## Dry-run status")
+        dryrun_table("single")
+        dryrun_table("multi")
+    if which in ("all", "roofline"):
+        print("\n## Roofline (single pod, per device)")
+        roofline_table()
+    if which in ("all", "perf"):
+        print("\n## Perf variants")
+        variants_table([
+            ("qwen3_1_7b__train_4k__single",
+             [("", "baseline"), ("_zero2", "+zero2"),
+              ("_fix2", "+bf16-gather (fix2)"),
+              ("_zero2mb4", "+zero2+mb4")]),
+            ("olmoe_1b_7b__train_4k__single",
+             [("", "baseline(fused)"), ("_moeser", "serialized dispatch"),
+              ("_zero2", "+zero2")]),
+            ("jamba_v0_1_52b__train_4k__single",
+             [("", "baseline"), ("_mambabf16", "+mamba bf16"),
+              ("_mb16", "+mb16"), ("_fix2", "per-layer remat (fix2)"),
+              ("_fix2opt", "fix2+bf16+zero2")]),
+            ("command_r_plus_104b__train_4k__single",
+             [("", "baseline"), ("_fix2", "bf16-gather (fix2)"),
+              ("_fix2opt", "fix2+zero2")]),
+            ("llama4_maverick_400b_a17b__train_4k__single",
+             [("", "baseline"), ("_fix2opt", "fix2+zero2")]),
+            ("qwen3_1_7b__train_4k__multi",
+             [("", "baseline"), ("_int8", "pod int8 EF"),
+              ("_topk", "pod topk EF")]),
+        ])

@@ -1,0 +1,2 @@
+"""repro: fused GPU-initiated halo exchange, rebuilt as a TPU/JAX framework."""
+__version__ = "1.0.0"

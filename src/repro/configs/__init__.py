@@ -1,0 +1,6 @@
+from repro.configs.base import (
+    ArchConfig, LayerSpec, MoECfg, SHAPES, ShapeCfg, shape_applicable)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+__all__ = ["ArchConfig", "LayerSpec", "MoECfg", "SHAPES", "ShapeCfg",
+           "shape_applicable", "ARCH_IDS", "all_configs", "get_config"]

@@ -1,0 +1,22 @@
+"""Core: the paper's fused halo-exchange algorithm and MD substrate."""
+from repro.core.halo import (
+    exchange_fwd_fused,
+    exchange_fwd_serialized,
+    exchange_rev_fused,
+    exchange_rev_serialized,
+    exchange_stats,
+    halo_exchange,
+)
+from repro.core.schedule import Pulse, PulseSchedule, make_schedule
+
+__all__ = [
+    "Pulse",
+    "PulseSchedule",
+    "make_schedule",
+    "halo_exchange",
+    "exchange_fwd_fused",
+    "exchange_fwd_serialized",
+    "exchange_rev_fused",
+    "exchange_rev_serialized",
+    "exchange_stats",
+]

@@ -1,0 +1,130 @@
+"""Cell-grid geometry and atom binning (the pair-search substrate).
+
+GROMACS bins atoms into cluster cells and builds pair lists from cell
+adjacency; we keep the cell grid itself as the pair structure (cutoff-sized
+cells, 14 base-anchored stencil interactions — see forces.py) and re-bin
+every ``nstlist`` steps, which plays the role of the pair-list "prune"
+cadence in the paper's schedule analysis (§5.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CellLayout:
+    """Static geometry of the decomposed cell grid.
+
+    ``mesh_shape`` is the 3-D domain grid (Z, Y, X domains); each domain
+    holds ``cells_per_domain`` cutoff-sized cells with ``capacity`` atom
+    slots per cell.  Positions are global; a domain's origin is
+    ``domain_index * cells_per_domain * cell_size``.
+    """
+
+    box: Tuple[float, float, float]
+    mesh_shape: Tuple[int, int, int]
+    cells_per_domain: Tuple[int, int, int]
+    capacity: int
+
+    @property
+    def cell_size(self) -> Tuple[float, float, float]:
+        return tuple(
+            self.box[d] / (self.mesh_shape[d] * self.cells_per_domain[d])
+            for d in range(3))
+
+    @property
+    def global_cells(self) -> Tuple[int, int, int]:
+        return tuple(self.mesh_shape[d] * self.cells_per_domain[d]
+                     for d in range(3))
+
+    @property
+    def n_local_cells(self) -> int:
+        cz, cy, cx = self.cells_per_domain
+        return cz * cy * cx
+
+    @property
+    def pool(self) -> int:
+        """Per-domain atom slot pool (flattened cell slots)."""
+        return self.n_local_cells * self.capacity
+
+
+def choose_layout(box, mesh_shape, r_cut: float, n_atoms: int,
+                  safety: float = 2.2, min_capacity: int = 8) -> CellLayout:
+    """Pick cutoff-sized cells and a slot capacity with headroom.
+
+    Cell size must be >= r_cut so a one-cell halo covers the cutoff sphere
+    (single pulse per dimension — the common GROMACS regime, paper §2.2).
+    """
+    cells = []
+    for d in range(3):
+        c = int(np.floor(box[d] / (mesh_shape[d] * r_cut)))
+        if c < 1:
+            raise ValueError(
+                f"domain extent {box[d] / mesh_shape[d]:.3f} < r_cut={r_cut}"
+                f" along dim {d}: too many domains for this system")
+        cells.append(c)
+    n_cells = int(np.prod([mesh_shape[d] * cells[d] for d in range(3)]))
+    avg_occ = n_atoms / n_cells
+    cap = max(min_capacity, int(np.ceil(avg_occ * safety)))
+    cap = int(np.ceil(cap / 4) * 4)   # pad for vectorization
+    return CellLayout(box=tuple(float(b) for b in box),
+                      mesh_shape=tuple(mesh_shape),
+                      cells_per_domain=tuple(cells), capacity=cap)
+
+
+def bin_to_cells(pos, feats_f, feats_i, layout: CellLayout, domain_index):
+    """Scatter a flat atom pool into (cz, cy, cx, K, ...) cell arrays.
+
+    ``pos`` (P,3) with invalid slots marked by ``feats_i[..., 0] < 0`` (the
+    atom id).  Returns (cell_f, cell_i, overflow_count).  Overflowing atoms
+    (rank >= capacity) are dropped and counted — tests assert the count
+    stays zero under the chosen safety factor.
+
+    Pure function of jnp arrays; runs inside shard_map.  ``domain_index``
+    is the (3,) int vector of this device's domain coordinates.
+    """
+    cz, cy, cx = layout.cells_per_domain
+    K = layout.capacity
+    csz = jnp.asarray(layout.cell_size, pos.dtype)
+    origin = domain_index.astype(pos.dtype) * \
+        jnp.asarray(layout.cells_per_domain, pos.dtype) * csz
+
+    valid = feats_i[:, 0] >= 0
+    rel = (pos - origin) / csz
+    cell3 = jnp.floor(rel).astype(jnp.int32)
+    cell3 = jnp.clip(cell3, 0, jnp.asarray([cz - 1, cy - 1, cx - 1]))
+    cell_id = (cell3[:, 0] * cy + cell3[:, 1]) * cx + cell3[:, 2]
+    n_cells = cz * cy * cx
+    cell_id = jnp.where(valid, cell_id, n_cells)          # invalid -> sentinel
+
+    order = jnp.argsort(cell_id, stable=True)
+    sorted_id = cell_id[order]
+    # rank within the cell: index - first occurrence of this cell id
+    first = jnp.searchsorted(sorted_id, sorted_id, side="left")
+    rank = jnp.arange(sorted_id.shape[0]) - first
+    keep = (sorted_id < n_cells) & (rank < K)
+    overflow = jnp.sum((sorted_id < n_cells) & (rank >= K))
+
+    slot = jnp.where(keep, sorted_id * K + rank, n_cells * K)
+    Pf = feats_f.shape[-1]
+    Pi = feats_i.shape[-1]
+    cell_f = jnp.zeros((n_cells * K + 1, 3 + Pf), pos.dtype)
+    cell_i = jnp.full((n_cells * K + 1, Pi), -1, feats_i.dtype)
+    src_f = jnp.concatenate([pos, feats_f], axis=-1)[order]
+    cell_f = cell_f.at[slot].set(jnp.where(keep[:, None], src_f, 0.0))
+    cell_i = cell_i.at[slot].set(jnp.where(keep[:, None], feats_i[order], -1))
+    cell_f = cell_f[:-1].reshape(cz, cy, cx, K, 3 + Pf)
+    cell_i = cell_i[:-1].reshape(cz, cy, cx, K, Pi)
+    return cell_f, cell_i, overflow
+
+
+def cells_to_pool(cell_f, cell_i):
+    """Flatten cell arrays back into the (P, ...) atom pool."""
+    K = cell_f.shape[3]
+    n = cell_f.shape[0] * cell_f.shape[1] * cell_f.shape[2] * K
+    return (cell_f.reshape(n, cell_f.shape[-1]),
+            cell_i.reshape(n, cell_i.shape[-1]))

@@ -1,0 +1,36 @@
+"""Velocity-Verlet integration + diagnostics (NVE; optional rescale)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+AXES = ("z", "y", "x")
+
+
+def kinetic_energy(vel, valid, mass: float):
+    v2 = jnp.sum(vel * vel, axis=-1)
+    ke_local = 0.5 * mass * jnp.sum(jnp.where(valid, v2, 0.0))
+    return lax.psum(ke_local, AXES)
+
+
+def momentum(vel, valid, mass: float):
+    p_local = mass * jnp.sum(jnp.where(valid[..., None], vel, 0.0),
+                             axis=tuple(range(vel.ndim - 1)))
+    return lax.psum(p_local, AXES)
+
+
+def n_atoms_global(valid):
+    return lax.psum(jnp.sum(valid), AXES)
+
+
+def temperature(ke, n_atoms, dof_per_atom: int = 3):
+    return 2.0 * ke / (dof_per_atom * jnp.maximum(n_atoms, 1))
+
+
+def velocity_rescale(vel, valid, mass, target_T, tau_steps: float):
+    """Weak Berendsen-style rescale toward target temperature."""
+    ke = kinetic_energy(vel, valid, mass)
+    n = n_atoms_global(valid)
+    T = temperature(ke, n)
+    lam = jnp.sqrt(1.0 + (target_T / jnp.maximum(T, 1e-8) - 1.0) / tau_steps)
+    return jnp.where(valid[..., None], vel * lam, vel)

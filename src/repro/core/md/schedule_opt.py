@@ -1,0 +1,18 @@
+"""Critical-path schedule notes (paper §5.4) — TPU mapping.
+
+The paper moves the pair-list prune kernel to a low-priority stream and adds
+a medium-priority stream for reduction/update so pruning cannot block the
+next step's critical path.  Under XLA there are no user-visible streams:
+the equivalent lever is *program partitioning* — we keep the rebin/migration
+("prune") work in a SEPARATE jitted program executed every ``nstlist``
+blocks, so the hot per-step program contains only force/halo/integration
+work and XLA's latency-hiding scheduler never interleaves prune work into
+the step's critical path.  That structural choice lives in
+``MDEngine._build_programs``; this module documents it and provides the
+hook point used by the engine so the design intent is greppable.
+"""
+
+
+def noop() -> None:
+    """Placeholder hook marking where stream-priority tuning would sit."""
+    return None

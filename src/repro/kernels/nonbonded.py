@@ -1,0 +1,113 @@
+"""Cluster-pair LJ + reaction-field force kernel (the paper's hot loop).
+
+GROMACS' non-bonded kernels interact i-clusters with j-clusters from the
+pair list; our cell scheme (see core/md/forces.py) interacts K-atom cell
+pairs across the 14-offset eighth-shell stencil.  This Pallas kernel
+computes one batch of cell pairs: given packed A-cells and B-cells
+(N, K, 4) [x, y, z, q] plus per-pair type tables, it produces forces on
+both sides and the pair potential energy.
+
+TPU adaptation (vs the CUDA cluster kernel): the K x K pair interaction
+tile is computed as VPU-vectorized broadcasts in VMEM (K is padded to the
+8x128 register tile), one cell pair block per grid step; HBM->VMEM
+streaming is expressed through BlockSpecs so the working set stays
+resident.  Validated in interpret mode against ref.py / the engine's jnp
+path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.md.system import ForceField
+
+
+def _pair_kernel(a_ref, b_ref, ta_ref, tb_ref, same_ref, eps_ref,
+                 sig_ref, fa_ref, fb_ref, pe_ref,
+                 *, r_cut2, k_rf, c_rf, kk: int):
+    a = a_ref[...]                                # (C, K, 4)
+    b = b_ref[...]
+    ta = ta_ref[...]                              # (C, K) int32
+    tb = tb_ref[...]
+    same = same_ref[...]                          # (C,) 1 if A is B
+    eps_t = eps_ref[...]                          # (T, T) LJ tables in VMEM
+    sig_t = sig_ref[...]
+
+    pos_a, q_a = a[..., :3], a[..., 3]
+    pos_b, q_b = b[..., :3], b[..., 3]
+    valid_a, valid_b = ta >= 0, tb >= 0
+
+    dx = pos_a[:, :, None, :] - pos_b[:, None, :, :]
+    r2 = jnp.sum(dx * dx, axis=-1)
+    mask = valid_a[:, :, None] & valid_b[:, None, :]
+    mask &= r2 < r_cut2
+    # same-cell pairs take the strict upper triangle (each pair once);
+    # distinct cells interact fully — slots never alias across cells
+    tri = jnp.triu(jnp.ones((kk, kk), jnp.bool_), k=1)[None]
+    full = jnp.ones((1, kk, kk), jnp.bool_)
+    mask &= jnp.where(same[:, None, None] > 0, tri, full)
+
+    r2s = jnp.where(mask, r2, 1.0)
+    inv_r2 = 1.0 / r2s
+    tai = jnp.clip(ta, 0, eps_t.shape[0] - 1)
+    tbi = jnp.clip(tb, 0, eps_t.shape[0] - 1)
+    eps = eps_t[tai[:, :, None], tbi[:, None, :]]
+    sig = sig_t[tai[:, :, None], tbi[:, None, :]]
+    sr2 = sig * sig * inv_r2
+    sr6 = sr2 * sr2 * sr2
+    sr12 = sr6 * sr6
+    fac_lj = 24.0 * eps * (2.0 * sr12 - sr6) * inv_r2
+    src2 = sig * sig / r_cut2
+    src6 = src2 * src2 * src2
+    e_lj = 4.0 * eps * ((sr12 - sr6) - (src6 * src6 - src6))
+    inv_r = jnp.sqrt(inv_r2)
+    qq = q_a[:, :, None] * q_b[:, None, :]
+    fac_c = qq * (inv_r * inv_r2 - 2.0 * k_rf)
+    e_c = qq * (inv_r + k_rf * r2s - c_rf)
+    fac = jnp.where(mask, fac_lj + fac_c, 0.0)
+    pe = jnp.where(mask, e_lj + e_c, 0.0)
+
+    fvec = fac[..., None] * dx
+    fa_ref[...] = jnp.sum(fvec, axis=2)
+    fb_ref[...] = -jnp.sum(fvec, axis=1)
+    pe_ref[...] = jnp.sum(pe, axis=(1, 2))
+
+
+def pair_forces(a, b, ta, tb, same, ff: ForceField, block: int = 8,
+                interpret: bool = True):
+    """Forces + energies for N cell pairs.
+
+    a, b: (N, K, 4) packed [x, y, z, q]; ta, tb: (N, K) atom types with
+    -1 padding; same: (N,) nonzero when a pair is a cell with itself
+    (triangle masking).  Returns (fa (N,K,3), fb (N,K,3), pe (N,)).
+    """
+    N, K, _ = a.shape
+    block = min(block, N)
+    while N % block:
+        block -= 1
+    grid = (N // block,)
+    kern = functools.partial(
+        _pair_kernel,
+        r_cut2=ff.r_cut ** 2, k_rf=ff.k_rf, c_rf=ff.c_rf, kk=K)
+    bs = lambda *shape: pl.BlockSpec(shape, lambda i: (i,) + (0,) *
+                                     (len(shape) - 1))
+    eps_t = jnp.asarray(ff.eps, a.dtype)
+    sig_t = jnp.asarray(ff.sigma, a.dtype)
+    T = eps_t.shape[0]
+    tbl = pl.BlockSpec((T, T), lambda i: (0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[bs(block, K, 4), bs(block, K, 4),
+                  bs(block, K), bs(block, K), bs(block), tbl, tbl],
+        out_specs=[bs(block, K, 3), bs(block, K, 3), bs(block)],
+        out_shape=[jax.ShapeDtypeStruct((N, K, 3), a.dtype),
+                   jax.ShapeDtypeStruct((N, K, 3), a.dtype),
+                   jax.ShapeDtypeStruct((N,), a.dtype)],
+        interpret=interpret,
+    )(a, b, ta, tb, same, eps_t, sig_t)

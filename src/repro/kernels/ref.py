@@ -1,0 +1,116 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.md.system import ForceField
+
+
+# ---- halo_pack.pack --------------------------------------------------------
+
+def pack_ref(src: np.ndarray, index_map: np.ndarray) -> np.ndarray:
+    rows = np.take(src, np.maximum(index_map, 0), axis=0)
+    rows[index_map < 0] = 0.0
+    return rows
+
+
+# ---- halo_pack.put_signal (ring exchange oracle across shards) -------------
+
+def put_signal_ref(srcs, index_maps):
+    """srcs: list over devices of (P, F); device d receives from d+1."""
+    ring = len(srcs)
+    return [pack_ref(srcs[(d + 1) % ring], index_maps[(d + 1) % ring])
+            for d in range(ring)]
+
+
+# ---- halo_pack.fused_pulses (staged multi-pulse oracle) ---------------------
+
+def fused_pulses_ref(srcs, index_maps, n_local: int):
+    """Staged forwarding oracle.
+
+    srcs: list over devices of (P, F); index_maps: list over devices of
+    (n_pulses, M) with entries >= n_local referencing the SENDER's
+    previous-pulse receive buffer.  Returns per-device (n_pulses, M, F).
+    """
+    ring = len(srcs)
+    n_pulses, M = index_maps[0].shape
+    F = srcs[0].shape[-1]
+    recv = [np.zeros((n_pulses, M, F), srcs[0].dtype) for _ in range(ring)]
+    for p in range(n_pulses):
+        for d in range(ring):
+            s = (d + 1) % ring                   # sender
+            idx = index_maps[s][p]
+            rows = np.zeros((M, F), srcs[0].dtype)
+            for j, i in enumerate(idx):
+                if i < 0:
+                    continue
+                if i < n_local:
+                    rows[j] = srcs[s][i]
+                else:
+                    rows[j] = recv[s][p - 1, i - n_local]
+            recv[d][p] = rows
+    return recv
+
+
+# ---- nonbonded.pair_forces ---------------------------------------------------
+
+def pair_forces_ref(a, b, ta, tb, same, ff: ForceField):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    ta = np.asarray(ta)
+    tb = np.asarray(tb)
+    same = np.asarray(same)
+    N, K, _ = a.shape
+    eps_t = np.asarray(ff.eps)
+    sig_t = np.asarray(ff.sigma)
+    fa = np.zeros((N, K, 3))
+    fb = np.zeros((N, K, 3))
+    pe = np.zeros((N,))
+    for n in range(N):
+        for i in range(K):
+            if ta[n, i] < 0:
+                continue
+            for j in range(K):
+                if tb[n, j] < 0:
+                    continue
+                if same[n] and j <= i:
+                    continue
+                dx = a[n, i, :3] - b[n, j, :3]
+                r2 = float(dx @ dx)
+                if r2 >= ff.r_cut ** 2:
+                    continue
+                eps = eps_t[ta[n, i], tb[n, j]]
+                sig = sig_t[ta[n, i], tb[n, j]]
+                sr6 = (sig * sig / r2) ** 3
+                sr12 = sr6 ** 2
+                fac = 24 * eps * (2 * sr12 - sr6) / r2
+                src6 = (sig * sig / ff.r_cut ** 2) ** 3
+                e = 4 * eps * ((sr12 - sr6) - (src6 ** 2 - src6))
+                qq = a[n, i, 3] * b[n, j, 3]
+                fac += qq * (r2 ** -1.5 - 2 * ff.k_rf)
+                e += qq * (r2 ** -0.5 + ff.k_rf * r2 - ff.c_rf)
+                fa[n, i] += fac * dx
+                fb[n, j] -= fac * dx
+                pe[n] += e
+    return fa, fb, pe
+
+
+# ---- flash_attention ----------------------------------------------------------
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (BH, L, G, hd); k/v: (BH, S, hd) -> (BH, L, G, hd), f32 math."""
+    qf = np.asarray(q, np.float64)
+    kf = np.asarray(k, np.float64)
+    vf = np.asarray(v, np.float64)
+    BH, L, G, hd = qf.shape
+    S = kf.shape[1]
+    logits = np.einsum("blgd,bsd->blgs", qf, kf) / np.sqrt(hd)
+    if causal:
+        mask = np.arange(L)[:, None] >= np.arange(S)[None, :]
+        logits = np.where(mask[None, :, None, :], logits, -1e30)
+    logits -= logits.max(axis=-1, keepdims=True)
+    p = np.exp(logits)
+    p /= p.sum(axis=-1, keepdims=True)
+    return np.einsum("blgs,bsd->blgd", p, vf)

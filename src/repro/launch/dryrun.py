@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh ((16,16) or (2,16,16)) and ShardingCtx,
+  2. lowers + compiles the step program from ShapeDtypeStruct inputs
+     (no allocation),
+  3. prints compiled.memory_analysis() (proves it fits) and
+     cost_analysis() (XLA's own FLOPs/bytes),
+  4. parses the optimized HLO with trip-count multipliers
+     (launch/hlo_analysis.py) and derives the three roofline terms,
+  5. writes results/dryrun/<arch>__<shape>__<mesh><tag>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+  python -m repro.launch.dryrun --summarize   # markdown table from JSONs
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    active_param_count,
+    batch_specs,
+    make_ctx,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    param_count,
+)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides=None, tag: str = ""):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides.get("cfg", {}))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(cfg, shape, mesh,
+                   fsdp=(overrides or {}).get("fsdp"))
+    kw = {}
+    for k in ("moe_dispatch", "zero2"):
+        if overrides and k in overrides:
+            kw[k] = overrides[k]
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            kw.pop("zero2", None) if shape.kind != "train" else None
+            prog = make_train_step(cfg, shape, ctx,
+                                   microbatches=(overrides or {})
+                                   .get("microbatches"),
+                                   pod_compress=(overrides or {})
+                                   .get("pod_compress"), **kw)
+            args = (prog.abstract_params, prog.abstract_opt)
+            if "pod" in mesh.axis_names and \
+                    (overrides or {}).get("pod_compress"):
+                args = args + (prog.abstract_params,)   # EF state
+            bshapes, _ = batch_specs(cfg, shape, ctx)
+            args = args + (bshapes,)
+            lowered = prog.step_fn.lower(*args)
+            extra = {"microbatches": prog.microbatches}
+        elif shape.kind == "prefill":
+            kw.pop("zero2", None)
+            fn, model, _ = make_prefill_step(cfg, shape, ctx, **kw)
+            bshapes, _ = batch_specs(cfg, shape, ctx)
+            lowered = fn.lower(model.abstract(), bshapes)
+            extra = {}
+        else:
+            kw.pop("zero2", None)
+            fn, model, _ = make_decode_step(cfg, shape, ctx, **kw)
+            bshapes, _ = batch_specs(cfg, shape, ctx)
+            cache = model.cache_shapes(shape.global_batch, shape.seq_len)
+            lowered = fn.lower(model.abstract(), bshapes["tokens"],
+                               bshapes["pos"], cache)
+            extra = {}
+    return lowered, cfg, shape, ctx, extra
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None,
+             tag: str = "", verbose: bool = True):
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "tag": tag, "ok": False}
+    try:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            record.update({"skipped": why, "ok": True})
+            return record
+        lowered, cfg, shape, ctx, extra = lower_cell(
+            arch, shape_name, multi_pod, overrides, tag)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+        cost = compiled.cost_analysis() or {}
+        cost_d = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and
+                  k in ("flops", "bytes accessed")}
+        parsed = hlo_analysis.analyze(compiled.as_text())
+
+        chips = int(np.prod([lowered._lowering.compile_args[
+            "num_partitions"]])) if False else \
+            len(jax.devices()[:512 if multi_pod else 256])
+        n_act = active_param_count(cfg)
+        n_tot = param_count(cfg)
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind == "train" else
+            (shape.seq_len if shape.kind == "prefill" else 1))
+        factor = 6.0 if shape.kind == "train" else 2.0
+        model_flops = factor * n_act * tokens
+        chips = 512 if multi_pod else 256
+        tp = 16
+        dp = chips // tp
+        # analytic per-device traffic lower bound (see hlo_analysis)
+        cache_local = 0.0
+        if shape.kind == "decode":
+            n_attn = sum(1 for s in cfg.pattern_unit
+                         if s.kind == "attn") * cfg.n_units \
+                + (cfg.n_layers if cfg.is_encdec else 0)
+            kv_eff = max(cfg.n_kv_heads, 1)
+            cache_local = (shape.global_batch * shape.seq_len * kv_eff *
+                           cfg.head_dim * 2 * 2 * max(n_attn, 1)) / chips
+        analytic = hlo_analysis.analytic_memory_bytes(
+            n_params_stored=n_tot / tp,           # per-device weight reads
+            n_params_active=n_act / tp,
+            tokens_local=tokens / max(dp, 1),
+            d_model=cfg.d_model, n_layers=cfg.n_layers,
+            kind=shape.kind,
+            opt_bytes_per_param=8.0 * tp / chips,  # ZeRO: states /chips
+            cache_bytes_local=cache_local)
+        terms = hlo_analysis.roofline_terms(parsed, model_flops / chips,
+                                            analytic_bytes=analytic)
+
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": mem_d,
+            "device_total_bytes": mem_d["argument_size_in_bytes"] +
+            mem_d["output_size_in_bytes"] + mem_d["temp_size_in_bytes"] -
+            mem_d["alias_size_in_bytes"],
+            "cost_analysis": cost_d,
+            "parsed": {k: v for k, v in parsed.items()},
+            "params": param_count(cfg),
+            "active_params": n_act,
+            "model_flops": model_flops,
+            "roofline": terms,
+            **extra,
+        })
+        if verbose:
+            print(f"  memory_analysis: {mem_d}")
+            print(f"  cost_analysis:   {cost_d}")
+            print(f"  parsed:          flops={parsed['flops']:.3e} "
+                  f"bytes={parsed['bytes']:.3e} "
+                  f"coll={parsed['collective_bytes']:.3e}")
+            print(f"  roofline:        {terms}")
+    except Exception as e:  # noqa
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(record["traceback"])
+    finally:
+        record["wall_s"] = round(time.time() - t0, 1)
+        jax.clear_caches()
+    return record
+
+
+def cell_path(arch, shape, mesh_name, tag=""):
+    return RESULTS / f"{arch}__{shape}__{mesh_name}{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--summarize", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None)
+    ap.add_argument("--pod-compress", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--zero2", action="store_true")
+    ap.add_argument("--mamba-dtype", default=None)
+    ap.add_argument("--remat-policy", default=None)
+    args = ap.parse_args()
+
+    if args.summarize:
+        summarize()
+        return
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if args.all or not args.arch else \
+        [args.arch.replace("-", "_").replace(".", "_")]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    overrides = {}
+    if args.moe_dispatch:
+        overrides["moe_dispatch"] = args.moe_dispatch
+    if args.pod_compress:
+        overrides["pod_compress"] = args.pod_compress
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    if args.zero2:
+        overrides["zero2"] = True
+    if args.mamba_dtype:
+        overrides.setdefault("cfg", {})["mamba_scan_dtype"] = \
+            args.mamba_dtype
+    if args.remat_policy:
+        overrides.setdefault("cfg", {})["remat_policy"] = args.remat_policy
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                path = cell_path(arch, shape, mesh_name, args.tag)
+                if path.exists() and not args.force:
+                    print(f"[skip] {path.name} exists")
+                    continue
+                print(f"[cell] {arch} x {shape} x {mesh_name}", flush=True)
+                rec = run_cell(arch, shape, mp, overrides or None, args.tag)
+                path.write_text(json.dumps(rec, indent=1))
+                status = "OK" if rec["ok"] else "FAIL"
+                print(f"[done] {path.name}: {status} "
+                      f"({rec['wall_s']}s)", flush=True)
+
+
+def summarize():
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        rows.append(r)
+    print(f"| arch | shape | mesh | status | GB/dev | flops/dev | "
+          f"coll B/dev | compute s | memory s | coll s | dominant | "
+          f"roofline frac |")
+    print("|" + "---|" * 12)
+    for r in rows:
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['skipped']} |" + " |" * 8)
+            continue
+        if not r["ok"]:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                  f"{r.get('error', '')[:60]} |" + " |" * 8)
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+              f"| {r['device_total_bytes'] / 1e9:.2f} "
+              f"| {r['parsed']['flops']:.2e} "
+              f"| {r['parsed']['collective_bytes']:.2e} "
+              f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+              f"| {t['collective_s']:.2e} | {t['dominant']} "
+              f"| {t.get('roofline_fraction', 0):.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,352 @@
+"""Trip-count-aware HLO cost model for the roofline analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in this
+container: a 10-iteration scan of a 256x256 matmul reports 33.5 MF, the
+unrolled version 335 MF).  Our models scan over layer units, q/kv blocks and
+SSM chunks, so we parse the optimized HLO instead and propagate each while
+op's ``known_trip_count`` into a per-computation multiplier:
+
+  * FLOPs        — dot/convolution ops (2 * out_elems * contracted_elems)
+  * HBM bytes    — operand + result bytes of top-level ops (fusion internals
+                   excluded: a fusion's traffic is its operands/results)
+  * collectives  — operand bytes of all-gather / all-reduce / reduce-scatter
+                   / all-to-all / collective-permute (+ async -start forms)
+
+The parser is validated against cost_analysis() on loop-free programs and
+against analytic 6ND estimates in tests/test_hlo_analysis.py.
+
+All figures are PER DEVICE (the SPMD module is already partitioned), so
+roofline terms divide by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+# v5e-like hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# HBM-traffic model: count operand/result bytes only at likely fusion
+# boundaries.  The CPU backend leaves long elementwise chains unfused that
+# XLA:TPU would fuse into single HBM round-trips; counting every top-level
+# op overstates traffic ~5-10x.  This whitelist approximates TPU fusion:
+# contractions, data movement, reductions and collectives are boundaries,
+# pure elementwise/broadcast/compare/convert ops are assumed fused.
+_MEMORY_OPS = frozenset({
+    "dot", "convolution", "fusion", "custom-call", "reduce",
+    "reduce-window", "scatter", "gather", "sort", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "transpose",
+    "select-and-scatter",
+    # NOT counted: "copy" — on CPU HLO these are SSA/tuple bookkeeping of
+    # while carries (a copy of a loop-carried tuple "moves" every param
+    # byte; on TPU these are aliased no-ops)
+    *COLLECTIVE_OPS, *(c + "-start" for c in COLLECTIVE_OPS),
+})
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """(bytes, elems) for a possibly-tuple HLO type string."""
+    total_b = 0
+    total_e = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_b += elems * _DTYPE_BYTES[dt]
+        total_e += elems
+    return total_b, total_e
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        # tuple types embed /*index=N*/ comments whose '=' breaks parsing
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        if current is None:
+            m = _COMP_START_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                current = Computation(name=m.group(2), ops=[],
+                                      is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(name=m.group(1), type_str=m.group(2),
+                                  opcode=m.group(3), line=line))
+    if current is not None:
+        comps[current.name] = current
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Propagate while trip counts down the call graph."""
+    mult: Dict[str, float] = {c.name: 0.0 for c in comps.values()}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {k: 1.0 for k in mult}
+    mult[entry.name] = 1.0
+    # topological-ish: iterate to fixpoint (call graphs here are shallow)
+    for _ in range(len(comps) + 2):
+        changed = False
+        for comp in comps.values():
+            m0 = mult.get(comp.name, 0.0)
+            if m0 == 0.0:
+                continue
+            for op in comp.ops:
+                called = _CALLED_RE.findall(op.line)
+                br = _BRANCHES_RE.search(op.line)
+                if br:
+                    called += [c.strip().lstrip("%")
+                               for c in br.group(1).split(",") if c.strip()]
+                if not called:
+                    continue
+                trip = 1.0
+                if op.opcode == "while":
+                    t = _TRIP_RE.search(op.line)
+                    trip = float(t.group(1)) if t else 1.0
+                for cname in called:
+                    if cname not in mult:
+                        continue
+                    new = m0 * trip
+                    if new > mult[cname]:
+                        mult[cname] = new
+                        changed = True
+        if not changed:
+            break
+    return {k: max(v, 0.0) for k, v in mult.items()}
+
+
+def _fusion_bodies(comps: Dict[str, Computation]) -> set:
+    """Computations called via fusion/call ops (their bytes don't count)."""
+    out = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode in ("fusion", "call", "reduce", "reduce-window",
+                             "scatter", "sort", "map", "select-and-scatter"):
+                for cname in _CALLED_RE.findall(op.line):
+                    out.add(cname)
+    return out
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    _, out_elems = _shape_bytes_elems(op.type_str)
+    cm = _LHS_CONTRACT_RE.search(op.line)
+    operands = _operands(op)
+    if not operands:
+        return 0.0
+    lhs_dims = _first_shape_dims(shapes.get(operands[0], ""))
+    if lhs_dims is None:
+        return 0.0
+    contract = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    _, out_elems = _shape_bytes_elems(op.type_str)
+    operands = _operands(op)
+    if len(operands) < 2:
+        return 0.0
+    k_dims = _first_shape_dims(shapes.get(operands[1], ""))
+    if not k_dims:
+        return 0.0
+    # approximate: kernel elems / output-feature dim
+    k_elems = math.prod(k_dims)
+    out_feat = max(k_dims[-1], 1)
+    return 2.0 * out_elems * (k_elems / out_feat)
+
+
+def _operands(op: Op) -> List[str]:
+    """Operand names: %refs inside the op's parens before attributes."""
+    start = op.line.find(op.opcode + "(")
+    if start < 0:
+        return []
+    seg = op.line[start + len(op.opcode) + 1:]
+    depth = 1
+    out = []
+    for i, ch in enumerate(seg):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                seg = seg[:i]
+                break
+    return _OPERAND_RE.findall(seg)
+
+
+def analyze(hlo_text: str) -> Dict:
+    comps = parse_hlo(hlo_text)
+    mult = _multipliers(comps)
+    fusion_bodies = _fusion_bodies(comps)
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_bytes = 0.0
+    coll_detail: Dict[str, Dict[str, float]] = {}
+    unknown_trips = 0
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        shapes = {op.name: op.type_str for op in comp.ops}
+        in_fusion = comp.name in fusion_bodies
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while" and "known_trip_count" not in op.line:
+                unknown_trips += 1
+            if oc == "dot":
+                flops += m * _dot_flops(op, shapes)
+            elif oc == "convolution":
+                flops += m * _conv_flops(op, shapes)
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVE_OPS:
+                ob = sum(_shape_bytes_elems(shapes.get(o, ""))[0]
+                         for o in _operands(op))
+                coll_bytes += m * ob
+                d = coll_detail.setdefault(base, {"bytes": 0.0, "count": 0})
+                d["bytes"] += m * ob
+                d["count"] += m
+            if not in_fusion and oc in _MEMORY_OPS:
+                # producer-side accounting: each materialized tensor is
+                # written once and (assumed) read once downstream; counting
+                # operands as well would re-count every tensor per consumer
+                # in the CPU backend's long chains of small kLoop fusions.
+                out_b, _ = _shape_bytes_elems(op.type_str)
+                bytes_accessed += m * 2 * out_b
+
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "collective_bytes": coll_bytes,
+        "collectives": coll_detail,
+        "unknown_trip_whiles": unknown_trips,
+        "n_computations": len(comps),
+    }
+
+
+def roofline_terms(parsed: Dict, model_flops_per_device: float = 0.0,
+                   analytic_bytes: float = 0.0) -> Dict:
+    """Three roofline terms in seconds (per-device figures / per-chip peaks).
+
+    ``memory_s`` derives from the parsed HLO (pessimistic: CPU-backend
+    fusion granularity); ``memory_lb_s`` is the analytic lower bound
+    (params + optimizer + activations + caches touched once).  The true
+    TPU traffic lies between them; both are recorded.
+    """
+    ct = parsed["flops"] / PEAK_FLOPS
+    mt = parsed["bytes"] / HBM_BW
+    lt = parsed["collective_bytes"] / ICI_BW
+    dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+              key=lambda kv: kv[1])[0]
+    out = {
+        "compute_s": ct,
+        "memory_s": mt,
+        "collective_s": lt,
+        "dominant": dom,
+        "bound_s": max(ct, mt, lt),
+    }
+    if analytic_bytes:
+        out["memory_lb_s"] = analytic_bytes / HBM_BW
+        out["dominant_analytic"] = max(
+            (("compute", ct), ("memory", out["memory_lb_s"]),
+             ("collective", lt)), key=lambda kv: kv[1])[0]
+        out["bound_lb_s"] = max(ct, out["memory_lb_s"], lt)
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_flops_ratio"] = (model_flops_per_device /
+                                     parsed["flops"]) if parsed["flops"] \
+            else 0.0
+        out["roofline_fraction"] = (model_flops_per_device / PEAK_FLOPS) / \
+            out["bound_s"] if out["bound_s"] else 0.0
+        if analytic_bytes:
+            out["roofline_fraction_analytic"] = \
+                (model_flops_per_device / PEAK_FLOPS) / out["bound_lb_s"] \
+                if out["bound_lb_s"] else 0.0
+    return out
+
+
+def analytic_memory_bytes(n_params_stored: float, n_params_active: float,
+                          tokens_local: float, d_model: int, n_layers: int,
+                          kind: str, opt_bytes_per_param: float = 8.0,
+                          cache_bytes_local: float = 0.0) -> float:
+    """Per-device HBM-traffic lower bound for one step.
+
+    train: weights read (fwd+bwd) + grad write + optimizer state r/w +
+    activations written+read once per layer boundary (remat recompute adds
+    ~0.5x).  prefill/decode: weights once + cache traffic + activations.
+    """
+    act = tokens_local * d_model * 2.0 * n_layers
+    if kind == "train":
+        w = n_params_stored * (2 + 2 + 4)          # bf16 fwd+bwd, f32 grad w
+        o = n_params_stored * opt_bytes_per_param * 2
+        return w + o + act * 3.0 + cache_bytes_local
+    w = n_params_active * 2.0
+    return w + act * 2.0 + cache_bytes_local * 2.0

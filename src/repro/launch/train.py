@@ -1,0 +1,76 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+Runs the production train step (grad accumulation, ZeRO states, remat,
+checkpoint/resume, straggler watchdog) on whatever devices exist; pass
+--reduced for the CPU-sized smoke config.  On the production mesh this is
+the same code path the dry-run lowers for 256/512 chips.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_ctx, make_train_step
+from repro.optim import adamw
+from repro.runtime.train_loop import TrainLoopConfig, Watchdog, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--moe-dispatch", default="fused")
+    ap.add_argument("--data-vocab", type=int, default=None)
+    ap.add_argument("--copy-period", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduce()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
+                                global_batch=args.batch)
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev, 1) if n_dev > 1 else (1, 1),
+                     ("data", "model"))
+    ctx = make_ctx(cfg, shape, mesh, fsdp=False)
+    prog = make_train_step(
+        cfg, shape, ctx,
+        ocfg=adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                               total_steps=args.steps),
+        microbatches=args.microbatches, moe_dispatch=args.moe_dispatch,
+        donate=False)
+    print(f"arch={cfg.name} params on mesh {dict(mesh.shape)} "
+          f"microbatches={prog.microbatches}")
+
+    data_cfg = DataConfig(vocab=args.data_vocab or cfg.vocab,
+                          seq_len=args.seq, global_batch=args.batch,
+                          seed=0, copy_period=args.copy_period)
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every)
+    model = prog.model
+    wd = Watchdog(on_straggler=lambda s, dt, ew: print(
+        f"[watchdog] step {s} took {dt:.2f}s (ewma {ew:.2f}s)"))
+    params, opt, hist = run_training(
+        loop, prog, data_cfg, lambda: model.init(jax.random.PRNGKey(0)),
+        watchdog=wd)
+    print(f"done: final loss {hist[-1]['loss']:.4f} over "
+          f"{len(hist)} steps this run")
+
+
+if __name__ == "__main__":
+    main()

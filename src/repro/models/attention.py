@@ -1,0 +1,252 @@
+"""GQA attention: blocked (flash-style) causal/full attention + KV caches.
+
+Sharding strategy is auto-selected per arch (see DESIGN.md):
+  * ``head``  — q heads divisible by TP: heads shard over the model axis;
+    KV heads use the grouped-replication policy from parallel/sharding.
+  * ``seq``   — q heads not divisible by TP (starcoder2 36H, llama4 40H,
+    whisper 12H at TP=16): the q sequence shards over the model axis and
+    heads stay whole; KV is gathered.  Decode (L=1) always computes with
+    whole heads.
+
+The blocked kernel is a pure-JAX flash attention: outer scan over q chunks,
+inner scan over kv chunks, online max/denominator in f32.  The Pallas TPU
+kernel in kernels/flash_attention.py implements the same contraction with
+explicit VMEM tiling; models use this path for lowering portability, the
+kernel is validated against ref.py separately.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamDef, ParamDefs, linear, rms_norm, rotary
+from repro.parallel.sharding import ShardingCtx
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ArchConfig, cross: bool = False) -> ParamDefs:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    defs: ParamDefs = {
+        "wq": ParamDef((d, hq * hd), tp_dim=1),
+        "wk": ParamDef((d, hkv * hd), tp_dim=1),
+        "wv": ParamDef((d, hkv * hd), tp_dim=1),
+        "wo": ParamDef((hq * hd, d), tp_dim=0),
+    }
+    if cfg.use_bias:
+        defs["bq"] = ParamDef((hq * hd,), "zeros", tp_dim=0)
+        defs["bk"] = ParamDef((hkv * hd,), "zeros", tp_dim=0)
+        defs["bv"] = ParamDef((hkv * hd,), "zeros", tp_dim=0)
+        defs["bo"] = ParamDef((d,), "zeros")
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = ParamDef((hd,), "ones")
+        defs["k_norm"] = ParamDef((hd,), "ones")
+    return defs
+
+
+def shard_mode(cfg: ArchConfig, ctx: ShardingCtx) -> str:
+    return "head" if cfg.n_heads % ctx.tp == 0 else "seq"
+
+
+def _chunk(n: int, target: int) -> int:
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+def _project_qkv(p, x, kv_x, cfg: ArchConfig, positions, kv_positions,
+                 rope: bool):
+    B, L = x.shape[0], x.shape[1]
+    S = kv_x.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, L, hq, hd)
+    k = linear(kv_x, p["wk"], p.get("bk")).reshape(B, S, hkv, hd)
+    v = linear(kv_x, p["wv"], p.get("bv")).reshape(B, S, hkv, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(k, v, cfg: ArchConfig, ctx: ShardingCtx):
+    """Grouped replication of KV heads so the cache/einsum shard over TP."""
+    r = ctx.kv_repeat(cfg.n_kv_heads, cfg.n_heads)
+    if r > 1:
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    return k, v
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      q_chunk: int = 1024, kv_chunk: int = 2048,
+                      kv_len_mask: Optional[jnp.ndarray] = None):
+    """Flash-style attention.  q: (B, L, H, hd); k/v: (B, S, Hkv_eff, hd).
+
+    Heads are grouped (H = Hkv_eff * G).  Returns (B, L, H, hd).
+    ``kv_len_mask`` (B, S) masks padded cache slots during decode.
+    """
+    B, L, H, hd = q.shape
+    S, HK = k.shape[1], k.shape[2]
+    G = H // HK
+    scale = hd ** -0.5
+    qc = _chunk(L, q_chunk)
+    kc = _chunk(S, kv_chunk)
+    nq, nk = L // qc, S // kc
+
+    # stay in the storage dtype; accumulate in f32 via the dot's
+    # preferred_element_type (a f32 .astype of a cache slice gets hoisted
+    # by XLA into an f32 copy of the WHOLE stacked cache)
+    q = (q.astype(jnp.float32) * scale).astype(q.dtype) \
+        .reshape(B, nq, qc, HK, G, hd)
+    q = jnp.moveaxis(q, 1, 0)                       # (nq, B, qc, HK, G, hd)
+    kf = jnp.moveaxis(k.reshape(B, nk, kc, HK, hd), 1, 0)
+    vf = jnp.moveaxis(v.reshape(B, nk, kc, HK, hd), 1, 0)
+    if kv_len_mask is not None:
+        lm = jnp.moveaxis(kv_len_mask.reshape(B, nk, kc), 1, 0)
+    else:
+        lm = None
+
+    q_pos = q_offset + jnp.arange(L).reshape(nq, qc)
+    k_pos = jnp.arange(S).reshape(nk, kc)
+
+    def q_block(carry, qi):
+        qb, qp = qi
+
+        def kv_block(acc, ki):
+            kb, vb, kp, kmask = ki
+            m, l, o = acc
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                                preferred_element_type=jnp.float32)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask = qp[:, None] >= kp[None, :]
+            if kmask is not None:
+                mask = mask & kmask[:, None, None, None, :]
+                logits = jnp.where(mask, logits, NEG_INF)
+            else:
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + \
+                jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                           preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, HK, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, HK, G, qc), jnp.float32)
+        o0 = jnp.zeros((B, HK, G, qc, hd), jnp.float32)
+        xs = (kf, vf, k_pos, lm) if lm is not None else (kf, vf, k_pos)
+        if lm is None:
+            (m, l, o), _ = lax.scan(
+                lambda a, x: kv_block(a, (x[0], x[1], x[2], None)),
+                (m0, l0, o0), xs)
+        else:
+            (m, l, o), _ = lax.scan(kv_block, (m0, l0, o0), xs)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out                            # (B, HK, G, qc, hd)
+
+    _, outs = lax.scan(q_block, None, (q, q_pos))    # (nq, B, HK, G, qc, hd)
+    out = jnp.moveaxis(outs, 0, 3)                   # (B, HK, G, nq, qc, hd)
+    return out.reshape(B, HK * G, L, hd).transpose(0, 2, 1, 3) \
+        .astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token attention over a (possibly padded) cache.
+
+    q: (B, 1, H, hd); caches: (B, S, HK, hd); cache_len: () or (B,) valid
+    prefix length (the new token's K/V must already be written).
+    """
+    B, _, H, hd = q.shape
+    S, HK = k_cache.shape[1], k_cache.shape[2]
+    G = H // HK
+    qf = (q.astype(jnp.float32).reshape(B, HK, G, hd) * hd ** -0.5) \
+        .astype(k_cache.dtype)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache,
+                        preferred_element_type=jnp.float32)
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(v_cache.dtype)
+
+
+def attention_fwd(p, x, cfg: ArchConfig, ctx: ShardingCtx, *,
+                  positions, causal: bool = True, rope: bool = True,
+                  kv_x=None, kv_positions=None,
+                  cache: Optional[dict] = None, cache_index=None):
+    """Full attention sub-layer (projection + core + output proj).
+
+    With ``cache`` set this is a decode step: x is (B, 1, d), the new K/V
+    are written at ``cache_index`` and attention runs over the cache.
+    Returns (out, new_cache_or_None).
+    """
+    B, L, _ = x.shape
+    mode = shard_mode(cfg, ctx)
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, x, kv_x, cfg, positions, kv_positions, rope)
+    k, v = repeat_kv(k, v, cfg, ctx)
+    kva = ctx.kv_head_axis(cfg.n_kv_heads, cfg.n_heads)
+
+    new_cache = None
+    if cache is not None:
+        # write new kv into the cache at cache_index (donated buffers)
+        kc, vc = cache["k"], cache["v"]
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                             cache_index, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                             cache_index, axis=1)
+        bspec = ctx.batch_spec() if ctx.batch_axes else None
+        seq_ax = ctx.seq_axes[0] if ctx.seq_axes else None
+        if kva is None and seq_ax is None:
+            seq_ax = ctx.model_axis     # cache seq-sharded (see cache_specs)
+        kc = ctx.act(kc, bspec, seq_ax, kva, None)
+        vc = ctx.act(vc, bspec, seq_ax, kva, None)
+        new_cache = {"k": kc, "v": vc}
+        if L > 1:
+            # prefill: causal attention over the freshly projected prefix
+            out = blocked_attention(q, k, v, causal=True,
+                                    q_offset=cache_index)
+        else:
+            out = decode_attention(q, kc, vc, cache_index + 1)
+    elif cache_index is None and kv_x is not x:
+        # encoder-decoder cross attention (training): full, non-causal
+        out = blocked_attention(q, k, v, causal=False)
+    else:
+        if mode == "head":
+            q = ctx.act(q, ctx.batch_spec(), None, ctx.model_axis, None)
+            k = ctx.act(k, ctx.batch_spec(), None, kva, None)
+            v = ctx.act(v, ctx.batch_spec(), None, kva, None)
+        else:
+            # seq sharding: q sequence over model axis, kv gathered
+            q = ctx.act(q, ctx.batch_spec(), ctx.model_axis, None, None)
+            k = ctx.act(k, ctx.batch_spec(), None, None, None)
+            v = ctx.act(v, ctx.batch_spec(), None, None, None)
+        out = blocked_attention(q, k, v, causal=causal)
+
+    out = out.reshape(B, L, cfg.n_heads * cfg.head_dim)
+    out = linear(out, p["wo"], p.get("bo"))
+    return out, new_cache
+
+
+def init_cache_shapes(cfg: ArchConfig, ctx: ShardingCtx, batch: int,
+                      max_len: int, n_attn_layers: int, dtype):
+    """Abstract KV cache for one stack of attention layers (stacked dim 0)."""
+    hk = ctx.kv_heads_eff(cfg.n_kv_heads, cfg.n_heads)
+    shape = (n_attn_layers, batch, max_len, hk, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}

@@ -1,0 +1,315 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel + convs) is a STUB per the assignment: inputs are
+precomputed frame embeddings (B, T_enc, d_model).  Sinusoidal positions are
+used on both sides (upstream whisper uses sinusoidal encoder / learned
+decoder positions; learned tables don't extend to the 32k stress shapes, so
+both sides are sinusoidal here — recorded in DESIGN.md).
+
+Decode carries per-layer self-attention caches plus cross-attention K/V
+computed once from the encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    ParamDef,
+    ParamDefs,
+    abstract_params,
+    cast_floats,
+    cross_entropy,
+    init_params,
+    linear,
+    mlp_defs,
+    mlp_fwd,
+    norm_defs,
+    norm_fwd,
+    param_specs,
+    stack_defs,
+)
+from repro.parallel.sharding import ShardingCtx
+
+
+def sinusoid(positions, d_model: int):
+    """(..., L) -> (..., L, d) sinusoidal embedding, f32."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10_000.0) *
+                   jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def enc_layer_defs(cfg: ArchConfig) -> ParamDefs:
+    return {
+        "ln1": norm_defs(cfg.d_model, cfg.use_bias),
+        "attn": attn.attn_defs(cfg),
+        "ln2": norm_defs(cfg.d_model, cfg.use_bias),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.use_bias),
+    }
+
+
+def dec_layer_defs(cfg: ArchConfig) -> ParamDefs:
+    return {
+        "ln1": norm_defs(cfg.d_model, cfg.use_bias),
+        "attn": attn.attn_defs(cfg),
+        "lnx": norm_defs(cfg.d_model, cfg.use_bias),
+        "xattn": attn.attn_defs(cfg, cross=True),
+        "ln2": norm_defs(cfg.d_model, cfg.use_bias),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.use_bias),
+    }
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig, ctx: ShardingCtx, **_):
+        self.cfg = cfg
+        self.ctx = ctx
+        V = cfg.padded_vocab
+        self.defs: ParamDefs = {
+            "embed": ParamDef((V, cfg.d_model), "small_normal", tp_dim=0),
+            "enc_units": stack_defs(enc_layer_defs(cfg), cfg.encoder_layers),
+            "dec_units": stack_defs(dec_layer_defs(cfg), cfg.n_layers),
+            "enc_norm": norm_defs(cfg.d_model, cfg.use_bias),
+            "final_norm": norm_defs(cfg.d_model, cfg.use_bias),
+            "lm_head": ParamDef((cfg.d_model, V), "small_normal", tp_dim=1),
+        }
+        self.cdt = jnp.dtype(cfg.compute_dtype)
+        self.pdt = jnp.dtype(cfg.param_dtype)
+
+    # ---- params -----------------------------------------------------------
+
+    def init(self, rng):
+        return init_params(rng, self.defs, self.pdt)
+
+    def abstract(self):
+        return abstract_params(self.defs, self.pdt)
+
+    def specs(self):
+        cfg, ctx = self.cfg, self.ctx
+        return {
+            "embed": param_specs({"e": self.defs["embed"]}, ctx)["e"],
+            "enc_units": param_specs(enc_layer_defs(cfg), ctx, stacked=True),
+            "dec_units": param_specs(dec_layer_defs(cfg), ctx, stacked=True),
+            "enc_norm": jax.tree.map(
+                lambda _: P(), param_specs({"n": self.defs["enc_norm"]},
+                                           ctx)["n"]),
+            "final_norm": jax.tree.map(
+                lambda _: P(), param_specs({"n": self.defs["final_norm"]},
+                                           ctx)["n"]),
+            "lm_head": param_specs({"h": self.defs["lm_head"]}, ctx)["h"],
+        }
+
+    # ---- encoder ------------------------------------------------------------
+
+    def encode(self, params, frames):
+        cfg, ctx = self.cfg, self.ctx
+        B, T, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        x = frames.astype(self.cdt) + sinusoid(pos, cfg.d_model) \
+            .astype(self.cdt)
+        x = ctx.act(x, ctx.batch_spec(), None, None)
+
+        def body(x, p):
+            p = cast_floats(p, self.cdt)
+            def unit(p, x):
+                h = norm_fwd(p["ln1"], x, cfg.norm_eps)
+                o, _ = attn.attention_fwd(p["attn"], h, cfg, ctx,
+                                          positions=pos, causal=False,
+                                          rope=False)
+                x = x + o
+                h = norm_fwd(p["ln2"], x, cfg.norm_eps)
+                return x + mlp_fwd(p["mlp"], h, cfg.mlp_type)
+            if cfg.remat:
+                unit = jax.checkpoint(
+                    unit, policy=jax.checkpoint_policies.nothing_saveable)
+            return unit(p, x), None
+
+        x, _ = lax.scan(body, x, params["enc_units"])
+        return norm_fwd(params["enc_norm"], x, cfg.norm_eps)
+
+    # ---- decoder ------------------------------------------------------------
+
+    def _dec_unit(self, p, x, positions, enc_out=None, cache=None,
+                  cache_index=None):
+        cfg, ctx = self.cfg, self.ctx
+        h = norm_fwd(p["ln1"], x, cfg.norm_eps)
+        o, nc_self = attn.attention_fwd(
+            p["attn"], h, cfg, ctx, positions=positions, rope=False,
+            cache=None if cache is None else cache["attn"],
+            cache_index=cache_index)
+        x = x + o
+        h = norm_fwd(p["lnx"], x, cfg.norm_eps)
+        if cache is None:
+            o, _ = attn.attention_fwd(p["xattn"], h, cfg, ctx,
+                                      positions=positions, causal=False,
+                                      rope=False, kv_x=enc_out,
+                                      kv_positions=jnp.zeros_like(positions))
+        else:
+            # decode: cross K/V precomputed at encode time
+            B, L, _ = h.shape
+            hq, hd = cfg.n_heads, cfg.head_dim
+            q = linear(h, p["xattn"]["wq"], p["xattn"].get("bq")) \
+                .reshape(B, L, hq, hd)
+            xk, xv = cache["xk"], cache["xv"]
+            if L == 1:
+                o = attn.decode_attention(q, xk, xv, xk.shape[1])
+            else:
+                o = attn.blocked_attention(q, xk, xv, causal=False)
+            o = linear(o.reshape(B, L, hq * hd), p["xattn"]["wo"],
+                       p["xattn"].get("bo"))
+        x = x + o
+        h = norm_fwd(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_fwd(p["mlp"], h, cfg.mlp_type)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"attn": nc_self, "xk": cache["xk"],
+                         "xv": cache["xv"]}
+        return x, new_cache
+
+    def decode_stack(self, params, x, positions, enc_out=None, cache=None,
+                     cache_index=None, remat=None):
+        cfg, ctx = self.cfg, self.ctx
+        remat = cfg.remat if remat is None else remat
+        if cache is None:
+            def body(x, p):
+                p = cast_floats(p, self.cdt)
+                def unit(p, x):
+                    return self._dec_unit(p, x, positions, enc_out)[0]
+                if remat:
+                    unit = jax.checkpoint(
+                        unit,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                return unit(p, x), None
+            x, _ = lax.scan(body, x, params["dec_units"])
+            return x, None
+
+        def body(carry, xs):
+            x, cache_all = carry
+            p, idx = xs
+            p = cast_floats(p, self.cdt)
+            c = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, idx, 0,
+                                                   keepdims=False),
+                cache_all)
+            x, nc = self._dec_unit(p, x, positions, cache=c,
+                                   cache_index=cache_index)
+            cache_all = jax.tree.map(
+                lambda a, n: lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), idx, 0), cache_all, nc)
+            return (x, cache_all), None
+        n = self.cfg.n_layers
+        (x, new_cache), _ = lax.scan(
+            body, (x, cache), (params["dec_units"], jnp.arange(n)))
+        return x, new_cache
+
+    # ---- entry points ----------------------------------------------------------
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = norm_fwd(params["final_norm"], x, cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(self.cdt)
+        V, Vp = cfg.vocab, cfg.padded_vocab
+        if Vp != V:
+            logits = logits + jnp.where(jnp.arange(Vp) < V, 0.0,
+                                        -1e30).astype(logits.dtype)
+        return logits
+
+    def loss_fn(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens[:, :-1], axis=0) \
+            .astype(self.cdt)
+        B, L, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+        x = x + sinusoid(pos, cfg.d_model).astype(self.cdt)
+        x = ctx.act(x, ctx.batch_spec(), None, None)
+        x, _ = self.decode_stack(params, x, pos, enc_out)
+        loss = cross_entropy(self._logits(params, x), tokens[:, 1:])
+        return loss, {"ce": loss}
+
+    def build_cross_cache(self, params, enc_out):
+        """Precompute per-layer cross K/V from the encoder output."""
+        cfg, ctx = self.cfg, self.ctx
+        B, T, _ = enc_out.shape
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+        def body(_, p):
+            p = cast_floats(p, self.cdt)
+            k = linear(enc_out, p["xattn"]["wk"], p["xattn"].get("bk")) \
+                .reshape(B, T, hkv, hd)
+            v = linear(enc_out, p["xattn"]["wv"], p["xattn"].get("bv")) \
+                .reshape(B, T, hkv, hd)
+            k, v = attn.repeat_kv(k, v, cfg, ctx)
+            return None, (k.astype(self.cdt), v.astype(self.cdt))
+
+        _, (xk, xv) = lax.scan(body, None, params["dec_units"])
+        return xk, xv
+
+    def decode_step(self, params, token, pos, cache):
+        cfg = self.cfg
+        B = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0).astype(self.cdt)
+        positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
+        x = x + sinusoid(positions, cfg.d_model).astype(self.cdt)
+        x, new_cache = self.decode_stack(params, x, positions, cache=cache,
+                                         cache_index=pos, remat=False)
+        return self._logits(params, x)[:, 0], new_cache
+
+    def prefill(self, params, batch, cache=None):
+        """Encode + teacher-forced prefix -> last-position logits + cache."""
+        cfg, ctx = self.cfg, self.ctx
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
+        B, L, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+        x = x + sinusoid(pos, cfg.d_model).astype(self.cdt)
+        if cache is None:
+            x, _ = self.decode_stack(params, x, pos, enc_out, remat=False)
+            return self._logits(params, x[:, -1:])[:, 0], None
+        xk, xv = self.build_cross_cache(params, enc_out)
+        cache = jax.tree.map(lambda a: a, cache)
+        cache = dict(cache)  # shallow; leaves replaced below
+        cache = {"attn": cache["attn"], "xk": xk, "xv": xv}
+        x, new_cache = self.decode_stack(params, x, pos, cache=cache,
+                                         cache_index=0, remat=False)
+        return self._logits(params, x[:, -1:])[:, 0], new_cache
+
+    # ---- caches -----------------------------------------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int):
+        cfg, ctx = self.cfg, self.ctx
+        n = cfg.n_layers
+        hk = ctx.kv_heads_eff(cfg.n_kv_heads, cfg.n_heads)
+        shp = (n, batch, max_len, hk, cfg.head_dim)
+        xshp = (n, batch, cfg.encoder_seq, hk, cfg.head_dim)
+        return {
+            "attn": {"k": jax.ShapeDtypeStruct(shp, self.cdt),
+                     "v": jax.ShapeDtypeStruct(shp, self.cdt)},
+            "xk": jax.ShapeDtypeStruct(xshp, self.cdt),
+            "xv": jax.ShapeDtypeStruct(xshp, self.cdt),
+        }
+
+    def cache_specs(self):
+        ctx = self.ctx
+        b = ctx.batch_spec() if ctx.batch_axes else None
+        kva = ctx.kv_head_axis(self.cfg.n_kv_heads, self.cfg.n_heads)
+        seq = ctx.model_axis if kva is None else None
+        s = P(None, b, seq, kva, None)
+        # cross K/V stay replicated on seq (encoder length is short)
+        x = P(None, b, None, kva, None)
+        return {"attn": {"k": s, "v": s}, "xk": x, "xv": x}
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_len))

@@ -1,0 +1,218 @@
+"""Shared layer primitives + the ParamDef system.
+
+Params are plain pytrees (nested dicts of jnp arrays).  Each module declares
+its parameters once as ``ParamDef``s (shape, initializer, TP dim); the same
+declaration drives initialization, abstract shapes for the dry-run, and
+PartitionSpecs — so placement can never drift from the parameter tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import ShardingCtx, param_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    tp_dim: Optional[int] = None  # dim carrying tensor parallelism
+    scale: Optional[float] = None
+
+
+ParamDefs = Dict[str, "ParamDefs | ParamDef"]  # nested
+
+
+def _init_one(rng, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    scale = d.scale
+    if scale is None:
+        fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    if d.init == "small_normal":
+        scale = 0.02
+    return scale * jax.random.normal(rng, d.shape, dtype)
+
+
+def init_params(rng, defs: ParamDefs, dtype):
+    flat = _flatten(defs)
+    keys = jax.random.split(rng, len(flat))
+    leaves = {path: _init_one(k, d, dtype)
+              for k, (path, d) in zip(keys, flat.items())}
+    return _unflatten(leaves)
+
+
+def abstract_params(defs: ParamDefs, dtype):
+    flat = _flatten(defs)
+    return _unflatten({p: jax.ShapeDtypeStruct(d.shape, dtype)
+                       for p, d in flat.items()})
+
+
+def param_specs(defs: ParamDefs, ctx: ShardingCtx, stacked: bool = False):
+    flat = _flatten(defs)
+    out = {}
+    for path, d in flat.items():
+        shape = d.shape
+        tp = d.tp_dim
+        if stacked:
+            shape = (1,) + tuple(shape)   # placeholder stack dim
+            tp = None if tp is None else (tp + 1 if tp >= 0 else tp)
+        spec = param_spec(ctx, shape, tp, stacked=stacked)
+        out[path] = spec
+    return _unflatten(out)
+
+
+def stack_defs(defs: ParamDefs, n: int) -> ParamDefs:
+    """Prepend the scan-stack dim to every def (layer-stacked params)."""
+    flat = _flatten(defs)
+    out = {}
+    for path, d in flat.items():
+        tp = d.tp_dim
+        out[path] = ParamDef((n,) + tuple(d.shape), d.init,
+                             None if tp is None else
+                             (tp + 1 if tp >= 0 else tp), d.scale)
+    return _unflatten(out)
+
+
+def _flatten(defs, prefix=()):
+    flat = {}
+    for k, v in defs.items():
+        if isinstance(v, ParamDef):
+            flat[prefix + (k,)] = v
+        else:
+            flat.update(_flatten(v, prefix + (k,)))
+    return flat
+
+
+def _unflatten(flat):
+    out: dict = {}
+    for path, v in flat.items():
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = v
+    return out
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def linear(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rotary(x, positions, theta: float):
+    """RoPE on the last dim of (..., L, H, hd) given positions (..., L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freq / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv        # (..., L, half)
+    sin = jnp.sin(ang)[..., None, :]                            # (..., L, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def cast_floats(tree, dtype):
+    """Cast float leaves to the compute dtype (mixed-precision forward)."""
+    def f(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(f, tree)
+
+
+def norm_defs(d_model: int, use_bias: bool) -> ParamDefs:
+    d: ParamDefs = {"scale": ParamDef((d_model,), "ones")}
+    if use_bias:
+        d["bias"] = ParamDef((d_model,), "zeros")
+    return d
+
+
+def norm_fwd(p, x, eps: float):
+    """RMSNorm, or LayerNorm when the arch uses biases (whisper/starcoder2)."""
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# ---- MLP -------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, mlp_type: str,
+             use_bias: bool) -> ParamDefs:
+    defs: ParamDefs = {}
+    if mlp_type == "swiglu":
+        defs["w_gate"] = ParamDef((d_model, d_ff), tp_dim=1)
+        defs["w_up"] = ParamDef((d_model, d_ff), tp_dim=1)
+    else:
+        defs["w_up"] = ParamDef((d_model, d_ff), tp_dim=1)
+        if use_bias:
+            defs["b_up"] = ParamDef((d_ff,), "zeros", tp_dim=0)
+    defs["w_down"] = ParamDef((d_ff, d_model), tp_dim=0)
+    if use_bias:
+        defs["b_down"] = ParamDef((d_model,), "zeros")
+    return defs
+
+
+def mlp_fwd(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(linear(x, p["w_up"], p.get("b_up")))
+    return linear(h, p["w_down"], p.get("b_down"))
+
+
+# ---- losses -----------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Token-mean CE with z-loss, in f32; labels < 0 are ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,149 @@
+"""Mamba (S6) block for the Jamba hybrid — chunked associative-scan core.
+
+The inner dimension ``d_inner`` is tensor-parallel over the model axis
+(column-parallel in_proj, row-parallel out_proj), so the per-chunk scan
+workspace (B, C, d_inner_loc, d_state) stays VMEM-friendly.  The selective
+recurrence h_t = dA_t * h_{t-1} + dBx_t is a gated linear recurrence:
+within a chunk we use ``lax.associative_scan`` (log-depth, products of
+dA in (0,1) -> numerically stable), across chunks a ``lax.scan`` carries
+the (B, d_inner, d_state) state — the same chunk/state structure a TPU
+kernel would use.
+
+Decode carries (conv window, ssm state) per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamDef, ParamDefs
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_defs(cfg: ArchConfig) -> ParamDefs:
+    d = cfg.d_model
+    di = cfg.d_inner_mamba
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    r = dt_rank(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * di), tp_dim=1),
+        "conv_w": ParamDef((di, dc), "normal", tp_dim=0, scale=0.5),
+        "conv_b": ParamDef((di,), "zeros", tp_dim=0),
+        "x_proj": ParamDef((di, r + 2 * ds), tp_dim=0),
+        "dt_proj": ParamDef((r, di), tp_dim=1),
+        "dt_bias": ParamDef((di,), "zeros", tp_dim=0),
+        "A_log": ParamDef((di, ds), "ones", tp_dim=0),
+        "D": ParamDef((di,), "ones", tp_dim=0),
+        "out_proj": ParamDef((di, d), tp_dim=0),
+    }
+
+
+def _causal_conv(x, w, b, window_init=None):
+    """Depthwise causal conv over L via shifted adds.  x: (B, L, di)."""
+    B, L, di = x.shape
+    dc = w.shape[1]
+    if window_init is None:
+        pad = jnp.zeros((B, dc - 1, di), x.dtype)
+    else:
+        pad = window_init
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(dc):
+        out = out + xp[:, j:j + L] * w[:, j].astype(x.dtype)
+    new_window = xp[:, L:L + dc - 1] if dc > 1 else pad[:, :0]
+    return out + b.astype(x.dtype), new_window
+
+
+def _ssm_chunk(carry_h, chunk, A):
+    """One chunk of the selective scan.  chunk: dict of (B, C, ...)."""
+    dt, Bc, Cc, xin = chunk
+    dA = jnp.exp(dt[..., None] * A)                       # (B,C,di,ds)
+    dBx = dt[..., None] * Bc[:, :, None, :] * xin[..., None]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = b_cum + a_cum * carry_h[:, None]              # (B,C,di,ds)
+    y = jnp.einsum("bcds,bcs->bcd", h_all, Cc)
+    return h_all[:, -1], y
+
+
+def mamba_fwd(p, x, cfg: ArchConfig, *, chunk: int = 128,
+              state: Optional[dict] = None):
+    """x: (B, L, d).  With ``state`` set (decode), L must be 1.
+
+    Returns (out, new_state_or_None).
+    """
+    B, L, d = x.shape
+    di = cfg.d_inner_mamba
+    ds = cfg.mamba_d_state
+    r = dt_rank(cfg)
+    cdt = jnp.dtype(cfg.mamba_scan_dtype)
+
+    xz = (x @ p["in_proj"]).astype(cdt)
+    xin, z = xz[..., :di], xz[..., di:]
+    win0 = None if state is None else state["conv"].astype(cdt)
+    xin, new_win = _causal_conv(xin, p["conv_w"].astype(cdt),
+                                p["conv_b"], win0)
+    xin = jax.nn.silu(xin)
+
+    proj = xin @ p["x_proj"].astype(cdt)
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"].astype(cdt)
+                         + p["dt_bias"].astype(cdt))
+    Bc = proj[..., r:r + ds]
+    Cc = proj[..., r + ds:]
+    A = -jnp.exp(p["A_log"].astype(cdt))                  # (di, ds)
+
+    if state is not None and L == 1:
+        # single-token decode: one recurrence step
+        h = state["ssm"].astype(cdt)                      # (B, di, ds)
+        dA = jnp.exp(dt[:, 0, :, None] * A)
+        h = dA * h + dt[:, 0, :, None] * Bc[:, 0, None, :] \
+            * xin[:, 0, :, None]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None]
+        new_state = {"conv": new_win.astype(x.dtype),
+                     "ssm": h.astype(jnp.float32)}
+    else:
+        C = chunk
+        while L % C:
+            C -= 1
+        n = L // C
+        h0 = jnp.zeros((B, di, ds), cdt) if state is None \
+            else state["ssm"].astype(cdt)
+        seqs = tuple(a.reshape(B, n, C, -1).swapaxes(0, 1)
+                     for a in (dt, Bc, Cc, xin))
+
+        def step(h, ch):
+            h, y = _ssm_chunk(h, ch, A)
+            return h, y
+
+        h_final, ys = lax.scan(step, h0, seqs)            # (n, B, C, di)
+        y = ys.swapaxes(0, 1).reshape(B, L, di)
+        new_state = None if state is None else {
+            "conv": new_win.astype(x.dtype),
+            "ssm": h_final.astype(jnp.float32)}
+
+    y = y + xin * p["D"].astype(cdt)
+    y = y * jax.nn.silu(z)
+    out = (y.astype(x.dtype)) @ p["out_proj"]
+    return out, new_state
+
+
+def mamba_state_shapes(cfg: ArchConfig, batch: int, n_layers: int, dtype):
+    di, ds, dc = cfg.d_inner_mamba, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, dc - 1, di), dtype),
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, di, ds), jnp.float32),
+    }

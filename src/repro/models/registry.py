@@ -1,0 +1,13 @@
+"""Model registry: config -> model bundle (LM / EncDec)."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDec
+from repro.models.transformer import LM
+from repro.parallel.sharding import ShardingCtx
+
+
+def build_model(cfg: ArchConfig, ctx: ShardingCtx, **opts):
+    if cfg.is_encdec:
+        return EncDec(cfg, ctx, **opts)
+    return LM(cfg, ctx, **opts)

@@ -1,0 +1,144 @@
+"""RWKV6 "Finch" block: data-dependent decay linear attention + channel mix.
+
+Attention-free: the paper's halo-exchange technique does not apply to the
+token mixer (O(1) recurrent state, no KV halo) — see DESIGN.md
+§Arch-applicability.  The WKV recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+runs as a sequential ``lax.scan`` carrying S (B, H, hd, hd) — the numerically
+safe formulation (chunked matrix forms need exp(-cum log w) factors that
+overflow for fast decays; a TPU kernel would run the same sequential loop
+over a VMEM-resident chunk, see kernels/).
+
+Simplifications vs upstream RWKV6 (recorded here deliberately): the five
+token-shift interpolations use static learned mu (not the data-dependent
+ddlerp LoRA); the decay LoRA (w0 + tanh(x A) B) IS data-dependent as in the
+paper since it defines the architecture's headline feature.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamDef, ParamDefs, rms_norm
+
+
+def rwkv_defs(cfg: ArchConfig) -> ParamDefs:
+    d = cfg.d_model
+    H = cfg.rwkv_heads
+    hd = cfg.rwkv_head_dim
+    lora = cfg.rwkv_decay_lora
+    ff = cfg.d_ff
+    return {
+        "tm": {  # time mix
+            "mu": ParamDef((5, d), "small_normal"),       # r,k,v,w,g shifts
+            "Wr": ParamDef((d, d), tp_dim=1),
+            "Wk": ParamDef((d, d), tp_dim=1),
+            "Wv": ParamDef((d, d), tp_dim=1),
+            "Wg": ParamDef((d, d), tp_dim=1),
+            "Wo": ParamDef((d, d), tp_dim=0),
+            "w0": ParamDef((d,), "zeros"),
+            "wA": ParamDef((d, lora), "small_normal"),
+            "wB": ParamDef((lora, d), "small_normal"),
+            "u": ParamDef((H, hd), "small_normal"),
+            "ln_x": ParamDef((d,), "ones"),
+        },
+        "cm": {  # channel mix
+            "mu": ParamDef((2, d), "small_normal"),       # k, r shifts
+            "Wk": ParamDef((d, ff), tp_dim=1),
+            "Wv": ParamDef((ff, d), tp_dim=0),
+            "Wr": ParamDef((d, d), tp_dim=1),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """Shift right by one token; ``last`` (B, 1, d) is the decode carry."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence.  r/k/v/w: (B, L, H, hd) f32."""
+    B, L, H, hd = r.shape
+    seq = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))   # (L, B, H, hd)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        # o_t = r (S_{t-1} + diag(u) k^T v): the bonus term contracts the
+        # key dim with u folded in elementwise.
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S) + \
+            jnp.einsum("bhk,bhk,bhkv->bhv", rt, u[None], kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    S_final, outs = lax.scan(step, state, seq)
+    return outs.swapaxes(0, 1), S_final                   # (B,L,H,hd)
+
+
+def rwkv_time_mix(p, x, cfg: ArchConfig, state: Optional[dict] = None):
+    B, L, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    last = None if state is None else state["shift_tm"]
+    xx = _token_shift(x, last)
+    mu = p["mu"]
+    xr = _mix(x, xx, mu[0])
+    xk = _mix(x, xx, mu[1])
+    xv = _mix(x, xx, mu[2])
+    xw = _mix(x, xx, mu[3])
+    xg = _mix(x, xx, mu[4])
+
+    f32 = jnp.float32
+    r = (xr @ p["Wr"]).astype(f32).reshape(B, L, H, hd)
+    k = (xk @ p["Wk"]).astype(f32).reshape(B, L, H, hd)
+    v = (xv @ p["Wv"]).astype(f32).reshape(B, L, H, hd)
+    g = jax.nn.silu((xg @ p["Wg"]).astype(f32))
+    # data-dependent decay (the Finch feature)
+    ww = p["w0"].astype(f32) + \
+        jnp.tanh(xw.astype(f32) @ p["wA"].astype(f32)) @ p["wB"].astype(f32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, L, H, hd)
+
+    S0 = jnp.zeros((B, H, hd, hd), f32) if state is None \
+        else state["wkv"].astype(f32)
+    out, S = _wkv_scan(r, k, v, w, p["u"].astype(f32), S0)
+    out = out.reshape(B, L, d)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps)          # per-channel norm
+    out = (out * g).astype(x.dtype) @ p["Wo"]
+    new_state = None
+    if state is not None:
+        new_state = {"shift_tm": x[:, -1:],
+                     "wkv": S}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, state: Optional[dict] = None):
+    last = None if state is None else state["shift_cm"]
+    xx = _token_shift(x, last)
+    xk = _mix(x, xx, p["mu"][0])
+    xr = _mix(x, xx, p["mu"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    kv = k @ p["Wv"]
+    out = jax.nn.sigmoid(xr @ p["Wr"]) * kv
+    new_state = None if state is None else {"shift_cm": x[:, -1:]}
+    return out, new_state
+
+
+def rwkv_state_shapes(cfg: ArchConfig, batch: int, n_layers: int, dtype):
+    H, hd, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "shift_tm": jax.ShapeDtypeStruct((n_layers, batch, 1, d), dtype),
+        "shift_cm": jax.ShapeDtypeStruct((n_layers, batch, 1, d), dtype),
+        "wkv": jax.ShapeDtypeStruct((n_layers, batch, H, hd, hd),
+                                    jnp.float32),
+    }

@@ -1,0 +1,420 @@
+"""Decoder-only LM assembly: dense / MoE / RWKV / Mamba-hybrid / VLM-prefix.
+
+Layers are grouped into the config's ``pattern_unit`` (e.g. Jamba's
+[7 mamba + 1 attn] block); units are scanned with stacked parameters so the
+HLO stays one-unit-sized regardless of depth, and each unit is rematerialized
+in training.  Caches/states are likewise stacked per unit, so decode is a
+single scan as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (
+    ParamDef,
+    ParamDefs,
+    abstract_params,
+    cross_entropy,
+    init_params,
+    cast_floats,
+    mlp_defs,
+    mlp_fwd,
+    norm_defs,
+    norm_fwd,
+    param_specs,
+    stack_defs,
+)
+from repro.parallel.sharding import ShardingCtx
+
+
+def _layer_defs(cfg: ArchConfig, spec: LayerSpec) -> ParamDefs:
+    d: ParamDefs = {"ln1": norm_defs(cfg.d_model, cfg.use_bias)}
+    if spec.kind == "attn":
+        d["attn"] = attn.attn_defs(cfg)
+    elif spec.kind == "mamba":
+        d["mamba"] = mam.mamba_defs(cfg)
+    elif spec.kind == "rwkv":
+        d["rwkv"] = rwkv_mod.rwkv_defs(cfg)["tm"]
+    else:
+        raise ValueError(spec.kind)
+    d["ln2"] = norm_defs(cfg.d_model, cfg.use_bias)
+    if spec.kind == "rwkv":
+        d["cm"] = rwkv_mod.rwkv_defs(cfg)["cm"]
+    elif spec.moe:
+        d["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                            cfg.use_bias)
+    return d
+
+
+def unit_defs(cfg: ArchConfig) -> ParamDefs:
+    return {f"layer{i}": _layer_defs(cfg, s)
+            for i, s in enumerate(cfg.pattern_unit)}
+
+
+class LM:
+    """Decoder-only language model over a pattern-unit stack."""
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardingCtx,
+                 moe_dispatch: str = "fused"):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.moe_dispatch = moe_dispatch
+        V = cfg.padded_vocab
+        self.defs: ParamDefs = {
+            "embed": ParamDef((V, cfg.d_model), "small_normal", tp_dim=0),
+            "units": stack_defs(unit_defs(cfg), cfg.n_units),
+            "final_norm": norm_defs(cfg.d_model, cfg.use_bias),
+        }
+        if not cfg.tie_embeddings:
+            self.defs["lm_head"] = ParamDef((cfg.d_model, V),
+                                            "small_normal", tp_dim=1)
+        self.cdt = jnp.dtype(cfg.compute_dtype)
+        self.pdt = jnp.dtype(cfg.param_dtype)
+        self._vocab_bias = None
+
+    # ---- params ------------------------------------------------------------
+
+    def init(self, rng):
+        return init_params(rng, self.defs, self.pdt)
+
+    def abstract(self):
+        return abstract_params(self.defs, self.pdt)
+
+    def specs(self):
+        unit_sp = param_specs(unit_defs(self.cfg), self.ctx, stacked=True)
+        # expert weights use the manual EP (+expert-TP) placement so the
+        # global shardings match the shard_map region's in_specs exactly
+        for i, spec in enumerate(self.cfg.pattern_unit):
+            if spec.moe:
+                unit_sp[f"layer{i}"]["moe"].update(
+                    moe_mod.stacked_expert_specs(self.cfg, self.ctx))
+        out = {
+            "embed": param_specs({"e": self.defs["embed"]}, self.ctx)["e"],
+            "units": unit_sp,
+            "final_norm": jax.tree.map(lambda _: P(),
+                                       param_specs(
+                                           {"n": self.defs["final_norm"]},
+                                           self.ctx)["n"]),
+        }
+        if "lm_head" in self.defs:
+            out["lm_head"] = param_specs(
+                {"h": self.defs["lm_head"]}, self.ctx)["h"]
+        return out
+
+    def _unit_gather_spec(self):
+        """Per-iteration specs for the SLICED unit params: FSDP axis
+        dropped (gathered) on dense weights, expert weights left sharded.
+
+        Constraining the slice inside the scan body pins the FSDP
+        all-gather to the loop body — otherwise XLA can hoist a gather of
+        the whole layer stack out of the loop, defeating FSDP entirely.
+        """
+        ctx = self.ctx
+        unit_sp = param_specs(unit_defs(self.cfg), self.ctx, stacked=False)
+        for i, spec in enumerate(self.cfg.pattern_unit):
+            if spec.moe:
+                unit_sp[f"layer{i}"]["moe"].update(
+                    moe_mod.expert_specs(self.cfg, self.ctx))
+
+        def drop_fsdp(path_spec):
+            dims = [None if d == ctx.fsdp_axis else d for d in path_spec]
+            return P(*dims)
+
+        def walk(tree, under_moe=False):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v, under_moe or k == "moe")
+                else:
+                    out[k] = v if under_moe else drop_fsdp(v)
+            return out
+
+        return walk(unit_sp)
+
+    def _constrain_unit(self, p_unit):
+        if self.ctx.fsdp_axis is None:
+            return p_unit
+        specs = self._unit_gather_spec()
+        mesh = self.ctx.mesh
+        return jax.tree.map(
+            lambda x, s: lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, s)),
+            p_unit, specs, is_leaf=lambda x: not isinstance(x, dict))
+
+    # ---- layers ------------------------------------------------------------
+
+    def _layer(self, i: int, spec: LayerSpec, p, x, positions,
+               cache=None, cache_index=None):
+        cfg, ctx = self.cfg, self.ctx
+        aux = {}
+        h = norm_fwd(p["ln1"], x, cfg.norm_eps)
+        new_cache = {}
+        if spec.kind == "attn":
+            out, nc = attn.attention_fwd(
+                p["attn"], h, cfg, ctx, positions=positions,
+                cache=None if cache is None else cache.get("attn"),
+                cache_index=cache_index)
+            if nc is not None:
+                new_cache["attn"] = nc
+        elif spec.kind == "mamba":
+            out, ns = mam.mamba_fwd(
+                p["mamba"], h, cfg,
+                state=None if cache is None else cache.get("mamba"))
+            if ns is not None:
+                new_cache["mamba"] = ns
+        else:  # rwkv time mix
+            out, ns = rwkv_mod.rwkv_time_mix(
+                p["rwkv"], h, cfg,
+                state=None if cache is None else cache.get("rwkv_tm"))
+            if ns is not None:
+                new_cache["rwkv_tm"] = ns
+        x = x + out
+
+        h = norm_fwd(p["ln2"], x, cfg.norm_eps)
+        if spec.kind == "rwkv":
+            out, ns = rwkv_mod.rwkv_channel_mix(
+                p["cm"], h,
+                state=None if cache is None else cache.get("rwkv_cm"))
+            if ns is not None:
+                new_cache["rwkv_cm"] = ns
+        elif spec.moe:
+            out, aux = moe_mod.moe_fwd(p["moe"], h, cfg, ctx,
+                                       self.moe_dispatch)
+        else:
+            out = mlp_fwd(p["mlp"], h, cfg.mlp_type)
+        x = x + out
+        return x, aux, (new_cache if cache is not None else None)
+
+    def _unit(self, p_unit, x, positions, cache_unit=None, cache_index=None):
+        aux_sum = {"moe_lb": jnp.zeros((), jnp.float32),
+                   "moe_z": jnp.zeros((), jnp.float32)}
+        new_cache = {}
+        # NOTE: per-layer remat inside multi-layer units was tried for
+        # Jamba (hypothesis: coexisting SSM backward residuals) and
+        # REFUTED — peak memory unchanged, +20% compute and +16%
+        # collective bytes from the extra recompute (EXPERIMENTS.md §Perf)
+        per_layer_remat = False
+        for i, spec in enumerate(self.cfg.pattern_unit):
+            c = None if cache_unit is None else cache_unit[f"layer{i}"]
+            layer_fn = functools.partial(self._layer, i, spec,
+                                         cache=c, cache_index=cache_index)
+            if per_layer_remat:
+                layer_fn = jax.checkpoint(
+                    layer_fn,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, aux, nc = layer_fn(p_unit[f"layer{i}"], x, positions)
+            for k, v in aux.items():
+                aux_sum[k] = aux_sum[k] + v
+            if nc is not None:
+                new_cache[f"layer{i}"] = nc
+        return x, aux_sum, (new_cache if cache_unit is not None else None)
+
+    # ---- stacks ------------------------------------------------------------
+
+    def _run_stack(self, params, x, positions, cache=None, cache_index=None,
+                   remat: Optional[bool] = None):
+        ctx = self.ctx
+        remat = self.cfg.remat if remat is None else remat
+
+        if cache is None:
+            def body(carry, p_unit):
+                x, aux_acc = carry
+                x = ctx.act(x, ctx.batch_spec(), None, None)
+
+                def unit_fn(p, x):
+                    # cast the SHARD to bf16 first so the FSDP all-gather
+                    # moves bf16, not f32 (halves gather bytes + transients)
+                    p = self._constrain_unit(cast_floats(p, self.cdt))
+                    y, aux, _ = self._unit(p, x, positions)
+                    return y, aux
+                if remat:
+                    pol = jax.checkpoint_policies.nothing_saveable \
+                        if self.cfg.remat_policy == "nothing" else \
+                        jax.checkpoint_policies \
+                        .dots_with_no_batch_dims_saveable
+                    unit_fn = jax.checkpoint(unit_fn, policy=pol)
+                x, aux = unit_fn(p_unit, x)
+                aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+                return (x, aux_acc), None
+
+            aux0 = {"moe_lb": jnp.zeros((), jnp.float32),
+                    "moe_z": jnp.zeros((), jnp.float32)}
+            (x, aux), _ = lax.scan(body, (x, aux0), params["units"])
+            return x, aux, None
+
+        # cache rides the CARRY with in-place per-unit slice updates so
+        # the donated buffers alias through the scan (a cache in scan-ys
+        # would materialize a second full-cache output buffer)
+        def body(carry, xs):
+            x, cache_all = carry
+            p_unit, idx = xs
+            p_unit = self._constrain_unit(cast_floats(p_unit, self.cdt))
+            cache_unit = jax.tree.map(
+                lambda c: lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False),
+                cache_all)
+            x, _, new_cache = self._unit(p_unit, x, positions,
+                                         cache_unit=cache_unit,
+                                         cache_index=cache_index)
+            cache_all = jax.tree.map(
+                lambda c, n: lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0),
+                cache_all, new_cache)
+            return (x, cache_all), None
+
+        n_units = self.cfg.n_units
+        (x, new_cache), _ = lax.scan(
+            body, (x, cache), (params["units"], jnp.arange(n_units)))
+        return x, {}, new_cache
+
+    # ---- public entry points -------------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
+        return x
+
+    def _logits(self, params, x):
+        x = norm_fwd(params["final_norm"], x, self.cfg.norm_eps)
+        head = params.get("lm_head")
+        if head is None:
+            head = params["embed"].T
+        logits = x @ head.astype(self.cdt)
+        V, Vp = self.cfg.vocab, self.cfg.padded_vocab
+        if Vp != V:
+            bias = jnp.where(jnp.arange(Vp) < V, 0.0, -1e30)
+            logits = logits + bias.astype(logits.dtype)
+        return logits
+
+    def loss_fn(self, params, batch):
+        """batch: tokens (B, L+1) [+ prefix_embeds (B, P, d) for vlm]."""
+        cfg, ctx = self.cfg, self.ctx
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens[:, :-1])
+        labels = tokens[:, 1:]
+        prefix = batch.get("prefix_embeds")
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(self.cdt), x], axis=1)
+        B, L, _ = x.shape
+        x = ctx.act(x, ctx.batch_spec(), None, None)
+        positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+        x, aux, _ = self._run_stack(params, x, positions)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:]
+        logits = self._logits(params, x)
+        loss = cross_entropy(logits, labels)
+        metrics = {"ce": loss}
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux["moe_lb"] / cfg.n_layers \
+                + 1e-3 * aux["moe_z"] / cfg.n_layers
+            metrics.update(aux)
+        return loss, metrics
+
+    def prefill(self, params, batch, cache=None):
+        """Prefill logits for the LAST position (optionally filling cache)."""
+        ctx = self.ctx
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        prefix = batch.get("prefix_embeds")
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(self.cdt), x], axis=1)
+        B, L, _ = x.shape
+        x = ctx.act(x, ctx.batch_spec(), None, None)
+        positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+        if cache is None:
+            x, _, _ = self._run_stack(params, x, positions, remat=False)
+            return self._logits(params, x[:, -1:])[:, 0], None
+        x, _, new_cache = self._run_stack(params, x, positions, cache=cache,
+                                          cache_index=0, remat=False)
+        return self._logits(params, x[:, -1:])[:, 0], new_cache
+
+    def decode_step(self, params, token, pos, cache):
+        """token (B, 1) int32, pos scalar int32 index into the cache."""
+        B = token.shape[0]
+        x = self._embed(params, token)
+        positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
+        x, _, new_cache = self._run_stack(params, x, positions, cache=cache,
+                                          cache_index=pos, remat=False)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    # ---- caches ----------------------------------------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int):
+        """Abstract per-unit cache stack (stack dim 0 = units)."""
+        cfg, ctx = self.cfg, self.ctx
+        n = cfg.n_units
+        out = {}
+        for i, spec in enumerate(cfg.pattern_unit):
+            c = {}
+            if spec.kind == "attn":
+                hk = ctx.kv_heads_eff(cfg.n_kv_heads, cfg.n_heads)
+                shp = (n, batch, max_len, hk, cfg.head_dim)
+                c["attn"] = {"k": jax.ShapeDtypeStruct(shp, self.cdt),
+                             "v": jax.ShapeDtypeStruct(shp, self.cdt)}
+            elif spec.kind == "mamba":
+                di, ds, dc = (cfg.d_inner_mamba, cfg.mamba_d_state,
+                              cfg.mamba_d_conv)
+                c["mamba"] = {
+                    "conv": jax.ShapeDtypeStruct((n, batch, dc - 1, di),
+                                                 self.cdt),
+                    "ssm": jax.ShapeDtypeStruct((n, batch, di, ds),
+                                                jnp.float32)}
+            else:
+                H, hd, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+                c["rwkv_tm"] = {
+                    "shift_tm": jax.ShapeDtypeStruct((n, batch, 1, d),
+                                                     self.cdt),
+                    "wkv": jax.ShapeDtypeStruct((n, batch, H, hd, hd),
+                                                jnp.float32)}
+                c["rwkv_cm"] = {
+                    "shift_cm": jax.ShapeDtypeStruct((n, batch, 1, d),
+                                                     self.cdt)}
+            out[f"layer{i}"] = c
+        return out
+
+    def cache_specs(self):
+        """PartitionSpecs matching cache_shapes."""
+        cfg, ctx = self.cfg, self.ctx
+        b = ctx.batch_spec() if ctx.batch_axes else None
+        seq = ctx.seq_axes[0] if ctx.seq_axes else None
+        kva = ctx.kv_head_axis(cfg.n_kv_heads, cfg.n_heads)
+        # unshardable KV heads (llama4 40H/8kv, whisper 12H): shard the
+        # cache SEQUENCE over the model axis instead — decode becomes a
+        # distributed flash-decode with an LSE merge (GSPMD inserts it)
+        if kva is None and seq is None:
+            seq = ctx.model_axis
+        out = {}
+        for i, spec in enumerate(cfg.pattern_unit):
+            c = {}
+            if spec.kind == "attn":
+                s = P(None, b, seq, kva, None)
+                c["attn"] = {"k": s, "v": s}
+            elif spec.kind == "mamba":
+                tp = ctx.model_axis
+                c["mamba"] = {"conv": P(None, b, None, tp),
+                              "ssm": P(None, b, tp, None)}
+            else:
+                c["rwkv_tm"] = {"shift_tm": P(None, b, None, None),
+                                "wkv": P(None, b, None, None, None)}
+                c["rwkv_cm"] = {"shift_cm": P(None, b, None, None)}
+            out[f"layer{i}"] = c
+        return out
+
+    def init_cache(self, batch: int, max_len: int):
+        shapes = self.cache_shapes(batch, max_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)

@@ -1,0 +1,84 @@
+"""Error-feedback gradient compression for the cross-pod (DCN) axis.
+
+TPU analogue of the paper's transport adaptivity (§5.1: fine-grained
+zero-copy over NVLink vs coarsened staged puts over InfiniBand): intra-pod
+gradient reductions ride ICI uncompressed, while the slow pod axis can use
+int8 quantization (4x fewer DCN bytes) or top-k sparsification, both with
+error feedback so the compression bias is corrected over steps.
+
+All functions are per-tensor and run inside a ``shard_map`` manual over the
+``pod`` axis (see launch/steps.py); the collective itself is an all-gather
+of the compressed payload + local reduction, so the HLO collective bytes
+shrink measurably — verified in the multi-pod §Perf entries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_reduce(g, axis: str):
+    """Quantize to int8, all-gather over the pod axis, dequant + mean."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    qs = lax.all_gather(q, axis)                       # int8 on the wire
+    ss = lax.all_gather(scale, axis)
+    deq = qs.astype(jnp.float32) * ss.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    out = jnp.mean(deq, axis=0)
+    err = g - (jnp.clip(jnp.round(g / scale), -127, 127) * scale)
+    return out, err
+
+
+def _topk_reduce(g, axis: str, frac: float):
+    """Keep the top-|frac| fraction by magnitude; EF holds the rest."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(n * frac))
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    vg = lax.all_gather(sel, axis)                     # f32 values (k each)
+    ig = lax.all_gather(idx, axis)                     # s32 indices
+    npods = vg.shape[0]
+    acc = jnp.zeros((n,), jnp.float32)
+    for p in range(npods):                             # npods is tiny (2)
+        acc = acc.at[ig[p]].add(vg[p])
+    out = (acc / npods).reshape(g.shape)
+    err = flat.at[idx].set(0.0).reshape(g.shape)
+    return out, err
+
+
+def compressed_pod_mean(grads, ef_state, mode: Optional[str],
+                        axis: str = "pod", topk_frac: float = 0.02):
+    """Mean-reduce grads over the pod axis with optional compression.
+
+    Returns (reduced_grads, new_ef_state).  ``mode`` in
+    {None, "int8", "topk"}.  With mode None this is a plain psum-mean and
+    ef_state passes through.
+    """
+    if mode is None:
+        return jax.tree.map(lambda g: lax.pmean(g, axis), grads), ef_state
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if mode == "int8":
+            out, err = _int8_reduce(gf, axis)
+        elif mode == "topk":
+            out, err = _topk_reduce(gf, axis, topk_frac)
+        else:
+            raise ValueError(mode)
+        return out.astype(g.dtype), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import ShardingCtx, param_spec
+
+__all__ = ["ShardingCtx", "param_spec"]

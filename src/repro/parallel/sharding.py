@@ -1,0 +1,118 @@
+"""Sharding rules: DP / FSDP / TP / EP / CP over the production mesh.
+
+All models express placement through a ``ShardingCtx``; GSPMD inserts the
+collectives.  The paper-technique pieces (ring/context-parallel attention,
+fused MoE dispatch, halo exchange) use explicit ``shard_map`` sub-regions
+instead, so their collective schedules are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]          # ('pod','data') or ('data',)
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = None      # 'data' to FSDP-shard params
+    seq_axes: Tuple[str, ...] = ()       # context-parallel axes (long ctx)
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.batch_axes)
+
+    # ---- spec builders ---------------------------------------------------
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def batch_spec(self):
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 \
+            else self.batch_axes[0]
+
+    def act(self, x, *dims):
+        """Constraint helper: dims name mesh axes or None per array dim."""
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*dims)))
+
+    # ---- GQA KV-head policy ------------------------------------------------
+
+    def kv_repeat(self, n_kv_heads: int, n_heads: int = 0) -> int:
+        """Grouped replication factor so KV heads shard over TP.
+
+        kv % tp == 0 -> shard directly (repeat 1); tp % kv == 0 AND the
+        repeat divides the GQA group size -> repeat each head tp/kv times
+        (memory x r, collective-free); otherwise replicate KV (repeat 1,
+        head axis unsharded) — recorded per arch in DESIGN.md.
+        """
+        if n_kv_heads <= 0:
+            return 1
+        if n_kv_heads % self.tp == 0:
+            return 1
+        if self.tp % n_kv_heads == 0:
+            r = self.tp // n_kv_heads
+            g0 = (n_heads // n_kv_heads) if n_heads else r
+            if r <= g0 and g0 % r == 0:
+                return r
+        return 1
+
+    def kv_heads_eff(self, n_kv_heads: int, n_heads: int = 0) -> int:
+        return n_kv_heads * self.kv_repeat(n_kv_heads, n_heads)
+
+    def kv_head_axis(self, n_kv_heads: int, n_heads: int = 0) -> Optional[str]:
+        eff = self.kv_heads_eff(n_kv_heads, n_heads)
+        return self.model_axis if eff and eff % self.tp == 0 else None
+
+
+def fsdp_dim(shape: Sequence[int], fsdp_size: int,
+             taken: Sequence[Optional[str]]) -> Optional[int]:
+    """Pick the first free dim divisible by the FSDP axis size."""
+    for i, n in enumerate(shape):
+        if taken[i] is None and n % fsdp_size == 0:
+            return i
+    return None
+
+
+def param_spec(ctx: ShardingCtx, shape: Sequence[int],
+               tp_dim: Optional[int] = None, *,
+               stacked: bool = False) -> P:
+    """Weight PartitionSpec: TP on ``tp_dim`` + optional FSDP elsewhere.
+
+    ``stacked`` marks scan-stacked params whose dim 0 is the layer-stack
+    axis (never sharded).
+    """
+    dims: list[Optional[str]] = [None] * len(shape)
+    if tp_dim is not None:
+        if tp_dim < 0:
+            tp_dim += len(shape)
+        if shape[tp_dim] % ctx.tp == 0:
+            dims[tp_dim] = ctx.model_axis
+    if ctx.fsdp_axis is not None:
+        fsdp_size = ctx.mesh.shape[ctx.fsdp_axis]
+        start = 1 if stacked else 0
+        cand = [i for i in range(start, len(shape))
+                if dims[i] is None and shape[i] % fsdp_size == 0]
+        if cand:
+            # prefer the largest dim for even lay-out
+            i = max(cand, key=lambda j: shape[j])
+            dims[i] = ctx.fsdp_axis
+    return P(*dims)
+
+
+def tree_param_shardings(ctx: ShardingCtx, specs_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), specs_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,123 @@
+"""Production training driver: auto-resume, straggler watchdog, logging.
+
+Fault-tolerance contract (exercised by tests/test_fault_tolerance.py):
+  * the loop can be killed at ANY step and restarted with the same config;
+    it resumes from the latest valid checkpoint bit-exactly (deterministic
+    data + deterministic step function),
+  * checkpoint writes are atomic (see ckpt/checkpoint.py), so mid-save
+    crashes roll back to the previous step,
+  * a per-step watchdog tracks an EWMA of step time; a step exceeding
+    ``threshold x EWMA`` fires the straggler hook (at scale: trigger
+    checkpoint + hot-spare re-mesh, which reuses the elastic-restore path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.synthetic import DataConfig, SyntheticStream
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """EWMA step-time monitor with a straggler callback."""
+    alpha: float = 0.2
+    threshold: float = 3.0
+    warmup: int = 3
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    ewma: float = 0.0
+    n: int = 0
+    events: int = 0
+
+    def observe(self, step: int, dt: float):
+        if self.n >= self.warmup and self.ewma > 0 and \
+                dt > self.threshold * self.ewma:
+            self.events += 1
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt, self.ewma)
+        self.ewma = dt if self.n == 0 else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        self.n += 1
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    async_save: bool = False
+
+
+def run_training(loop_cfg: TrainLoopConfig, program, data_cfg: DataConfig,
+                 init_params_fn, batch_to_inputs=None,
+                 fail_at_step: Optional[int] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 log: Optional[Callable[[str], None]] = print):
+    """Run (or resume) training; returns (params, opt_state, history).
+
+    ``program`` is a TrainProgram from launch/steps.py.  ``fail_at_step``
+    raises just after that step completes (BEFORE its checkpoint) — the
+    failure-injection hook used by the fault-tolerance tests.
+    """
+    mgr = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep,
+                            async_save=loop_cfg.async_save)
+    watchdog = watchdog or Watchdog()
+
+    start_step = 0
+    resume = mgr.latest_valid_step()
+    if resume is not None:
+        state_tree = {"params": program.abstract_params,
+                      "opt": program.abstract_opt}
+        shardings = {"params": program.param_shardings,
+                     "opt": program.opt_shardings}
+        restored = mgr.restore(resume, state_tree, shardings)
+        params, opt_state = restored["params"], restored["opt"]
+        extra = mgr.manifest(resume)["extra"]
+        start_step = int(extra.get("next_step", resume))
+        if log:
+            log(f"[resume] step {start_step} from checkpoint {resume}")
+    else:
+        params = init_params_fn()
+        from repro.optim import adamw
+        params = jax.device_put(params, program.param_shardings)
+        opt_state = jax.device_put(adamw.init_state(params),
+                                   program.opt_shardings)
+
+    stream = SyntheticStream(data_cfg, start_step=start_step)
+    history = []
+    try:
+        for step in range(start_step, loop_cfg.total_steps):
+            batch_np = stream.next()
+            batch = {"tokens": jnp.asarray(batch_np)}
+            if batch_to_inputs is not None:
+                batch = batch_to_inputs(batch_np)
+            t0 = time.time()
+            params, opt_state, metrics = program.step_fn(params, opt_state,
+                                                         batch)
+            loss = float(metrics["loss" if "loss" in metrics else "ce"])
+            dt = time.time() - t0
+            watchdog.observe(step, dt)
+            history.append({"step": step, "loss": loss, "dt": dt})
+            if log and step % loop_cfg.log_every == 0:
+                log(f"[step {step}] loss={loss:.4f} {dt * 1e3:.0f}ms")
+            done = step + 1
+            if done % loop_cfg.ckpt_every == 0 or \
+                    done == loop_cfg.total_steps:
+                mgr.save(done, {"params": params, "opt": opt_state},
+                         extra={"next_step": done,
+                                "data_state": stream.state()})
+            if fail_at_step is not None and done == fail_at_step:
+                raise RuntimeError(f"injected failure after step {step}")
+    finally:
+        mgr.wait()
+        stream.close()
+    return params, opt_state, history

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, host sharding, checkpointable state."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.synthetic import DataConfig, SyntheticStream, _batch_at
+
+
+def test_deterministic_across_restarts():
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=8, seed=3)
+    s1 = SyntheticStream(cfg, prefetch=0)
+    ref = [s1.next() for _ in range(5)]
+    s2 = SyntheticStream(cfg, prefetch=2)
+    got = [s2.next() for _ in range(5)]
+    s2.close()
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_resume_from_state():
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=8, seed=3)
+    s1 = SyntheticStream(cfg, prefetch=0)
+    for _ in range(3):
+        s1.next()
+    state = s1.state()
+    want = s1.next()
+    s2 = SyntheticStream.from_state(cfg, state, prefetch=0)
+    np.testing.assert_array_equal(s2.next(), want)
+
+
+@given(step=st.integers(0, 500), seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_host_shards_partition_global_batch(step, seed):
+    """Concatenated per-host slices == the single-host global batch."""
+    base = DataConfig(vocab=211, seq_len=8, global_batch=8, seed=seed)
+    whole = _batch_at(base, step)
+    parts = [
+        _batch_at(DataConfig(vocab=211, seq_len=8, global_batch=8,
+                             seed=seed, n_hosts=4, host_id=h), step)
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts), whole)
+
+
+def test_tokens_in_range_and_learnable():
+    cfg = DataConfig(vocab=64, seq_len=128, global_batch=4, seed=0)
+    b = _batch_at(cfg, 0)
+    assert b.min() >= 0 and b.max() < 64
+    # the copy-motif makes token t equal token t-period most of the time
+    same = (b[:, cfg.copy_period:] == b[:, :-cfg.copy_period]).mean()
+    assert same > 0.6

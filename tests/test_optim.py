@@ -1,0 +1,85 @@
+"""Optimizer + gradient compression invariants."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.compression import _int8_reduce, _topk_reduce, ef_init
+
+
+def quad_loss(params):
+    return sum(jnp.sum((p - 1.5) ** 2) for p in jax.tree.leaves(params))
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                            total_steps=300)
+    state = adamw.init_state(params)
+    g = jax.jit(jax.grad(quad_loss))
+    step = jax.jit(lambda p, s: adamw.update(cfg, p, g(p), s))
+    for _ in range(300):
+        params, state, m = step(params, state)
+    assert float(quad_loss(params)) < 1e-3
+    assert int(state["step"]) == 300
+
+
+def test_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                            weight_decay=0.0)
+    state = adamw.init_state(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    new_p, state, m = adamw.update(cfg, params, grads, state)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.all(np.isfinite(np.asarray(new_p["w"])))
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] < lrs[9] <= lrs[10]
+    assert abs(lrs[10] - 1e-3) < 1e-9
+    assert lrs[100] == pytest.approx(1e-4, rel=1e-3)
+    assert all(b <= a + 1e-12 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_zero1_specs_add_data_axis():
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.sharding import ShardingCtx
+    from jax.sharding import PartitionSpec as P
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = ShardingCtx(mesh=mesh, batch_axes=("data",))
+    specs = {"w": P(None, "model")}
+    ap = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    out = adamw.zero1_specs(specs, ap, ctx)
+    assert out["m"]["w"] == P("data", "model")
+    assert out["step"] == P()
+
+
+# ---- compression (single-device math; collective path tested in dist) ------
+
+def test_int8_error_feedback_is_unbiased_over_steps():
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    rng = np.random.RandomState(0)
+    g_true = rng.randn(256).astype(np.float32)
+    err = np.zeros_like(g_true)
+    acc_comp = np.zeros_like(g_true)
+    for _ in range(50):
+        g = g_true + err
+        scale = np.abs(g).max() / 127.0 + 1e-12
+        q = np.clip(np.round(g / scale), -127, 127) * scale
+        err = g - q
+        acc_comp += q
+    acc_true = g_true * 50
+    rel = np.abs(acc_comp - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.02
+
+
+@pytest.mark.dist
+def test_compressed_pod_reduction(dist):
+    out = dist("check_compression.py")
+    assert "check_compression OK" in out

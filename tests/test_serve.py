@@ -1,0 +1,58 @@
+"""Serving loop: wave batching, greedy decode == full-context argmax."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.parallel.sharding import ShardingCtx
+from repro.runtime.serve_loop import BatchServer, Request, throughput_stats
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3-1.7b").reduce()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = ShardingCtx(mesh=mesh, batch_axes=("data",))
+    model = build_model(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def test_wave_serving_matches_stepwise_prefill(served):
+    cfg, model, params = served
+    rng = np.random.RandomState(0)
+    server = BatchServer(model, params, batch_size=3, max_len=32)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=(5,))
+                    .astype(np.int32), max_new_tokens=4) for _ in range(3)]
+    out = server.serve_wave(reqs)
+    stats = throughput_stats(out)
+    assert stats["tokens"] == 12 and stats["tok_per_s"] > 0
+
+    # oracle: greedy continuation via repeated full prefill
+    prefill = jax.jit(model.prefill)
+    for r in out:
+        toks = list(r.prompt)
+        for t in range(r.max_new_tokens):
+            logits, _ = prefill(params, {"tokens": jnp.asarray(
+                np.asarray(toks, np.int32)[None])})
+            nxt = int(jnp.argmax(logits[0]))
+            assert nxt == int(r.out_tokens[t]), (t, toks)
+            toks.append(nxt)
+
+
+def test_temperature_sampling_changes_output(served):
+    cfg, model, params = served
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab, size=(6,)).astype(np.int32)
+    greedy = BatchServer(model, params, batch_size=1, max_len=32)
+    hot = BatchServer(model, params, batch_size=1, max_len=32,
+                      temperature=2.0, seed=3)
+    g = greedy.serve_wave([Request(prompt=prompt, max_new_tokens=8)])
+    h = hot.serve_wave([Request(prompt=prompt, max_new_tokens=8)])
+    assert not np.array_equal(g[0].out_tokens, h[0].out_tokens)
