@@ -13,8 +13,7 @@ import json
 import numpy as np
 
 from benchmarks.common import RESULTS, emit, run_sub
-from repro.core.halo import exchange_stats
-from repro.core.schedule import make_schedule
+from repro.core.halo_plan import HaloPlan, HaloSpec
 
 
 def fig3_intranode_strong_scaling(quick: bool = False):
@@ -49,10 +48,16 @@ def fig5_multinode_critical_path():
     """Paper Fig. 5 analogue: per-DD-dimensionality chained halo bytes.
 
     At scale the iteration rate is bounded by the chained (serialized)
-    communication; we report the schedule-derived critical-path bytes for
+    communication; we report the plan-derived critical-path bytes for
     1D/2D/3D DD at the paper's ~90k atoms/GPU operating point, serialized
     vs fused, plus the dependent fraction that drives the gap.
     """
+    from repro.launch.mesh import make_mesh
+
+    plan = HaloPlan.build(
+        HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                 dtype="float32", feature_elems=4),
+        make_mesh((1, 1, 1), ("z", "y", "x")))
     for dd, name in [((4, 1, 1), "1D"), ((4, 4, 1), "2D"),
                      ((4, 4, 4), "3D")]:
         # paper operating point: 90k atoms PER DEVICE; the box grows with
@@ -61,9 +66,7 @@ def fig5_multinode_critical_path():
         box = (90_000 * n_dev / 0.78) ** (1 / 3)
         gcells = max(2, int(box / 2.7))
         local = tuple(max(1, gcells // d) for d in dd)
-        sched = make_schedule(("z", "y", "x"), (1, 1, 1))
-        stats = exchange_stats(sched, local, itemsize=4,
-                               feature_elems=4)
+        stats = plan.stats(local)
         ratio = stats["fused_critical_bytes"] / \
             max(stats["serialized_critical_bytes"], 1)
         emit(f"fig5/{name}dd/serialized_critical_KB", 0.0,

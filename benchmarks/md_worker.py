@@ -1,21 +1,24 @@
-"""Worker: MD step timing for one (devices, mode, size) cell -> JSON."""
+"""Worker: MD step timing for one (devices, backend, size) cell -> JSON."""
 import json
 import sys
 import time
 
 import jax
 
+from repro.core.halo_plan import HaloSpec
 from repro.core.md import MDEngine, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
 
 def main():
-    mode = sys.argv[1]
+    backend = sys.argv[1]
     n_atoms = int(sys.argv[2])
     steps = int(sys.argv[3]) if len(sys.argv) > 3 else 40
     system = make_grappa_like(n_atoms, seed=1)
     mesh = make_md_mesh()
-    eng = MDEngine(system, mesh, mode=mode)
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                    backend=backend)
+    eng = MDEngine(system, mesh, spec)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
     t0 = time.perf_counter()
@@ -30,14 +33,18 @@ def main():
         jax.block_until_ready(eng.force_fn(cf, ci))
     t_force_pass = (time.perf_counter() - t0) / 10
 
+    stats = eng.halo_stats()
     print(json.dumps({
         "devices": len(jax.devices()),
-        "mode": mode,
+        "mode": backend,
         "n_atoms": n_atoms,
         "dd": [int(mesh.shape[a]) for a in ("z", "y", "x")],
         "ms_per_step": dt * 1e3,
         "ms_force_pass": t_force_pass * 1e3,
         "atom_steps_per_s": n_atoms / dt,
+        "halo_total_bytes": stats["total_bytes"],
+        "halo_critical_bytes":
+        stats[f"{eng.plan.backend.critical_path}_critical_bytes"],
     }))
 
 

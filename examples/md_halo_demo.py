@@ -12,6 +12,7 @@ import time
 
 import jax
 
+from repro.core import HaloSpec
 from repro.core.md import MDEngine, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
@@ -20,11 +21,13 @@ mesh = make_md_mesh()
 n_dev = len(jax.devices())
 print(f"{n_dev} devices -> DD grid {dict(mesh.shape)}")
 
-for mode in ("serialized", "fused"):
-    eng = MDEngine(system, mesh, mode=mode)
+for backend in ("serialized", "fused"):
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                    backend=backend)
+    eng = MDEngine(system, mesh, spec)
     state, _, _ = eng.simulate(4, collect=False)         # warmup + compile
     t0 = time.time()
     state, metrics, _ = eng.simulate(40, state=state)
     dt = (time.time() - t0) / 40
-    print(f"{mode:11s}: {dt * 1e3:7.2f} ms/step "
+    print(f"{backend:11s}: {dt * 1e3:7.2f} ms/step "
           f"({system.n_atoms / dt / 1e6:.2f} Matom-steps/s)")

@@ -1,8 +1,8 @@
 """Quickstart: the paper's fused halo exchange in 40 lines.
 
 Runs a grappa-like MD system on all available devices, comparing the
-serialized (MPI-flavored) and fused (NVSHMEM-flavored) halo schedules, and
-shows the generic N-D halo exchange on a plain array.
+serialized (MPI-flavored) and fused (NVSHMEM-flavored) halo backends, and
+shows the plan-based N-D halo exchange on a plain array.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/quickstart.py
@@ -11,31 +11,41 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import halo, make_schedule
+from repro.core import HaloPlan, HaloSpec
 from repro.core.md import MDEngine, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
-# --- generic halo exchange on a dense grid ---------------------------------
+# --- plan-based halo exchange on a dense grid -------------------------------
 mesh = make_md_mesh()                    # factors devices into (Z, Y, X)
 print(f"device mesh: {dict(mesh.shape)}")
 x = jnp.arange(float(np.prod([8 * mesh.shape['z'], 8, 4]))) \
     .reshape(8 * mesh.shape["z"], 8, 4)
-ext = halo.halo_exchange(x, mesh, ("z",), (2,), mode="fused")
+plan = HaloPlan.build(HaloSpec(axis_names=("z",), widths=(2,),
+                               backend="fused"), mesh)
+ext = plan.fwd(x)
 print(f"halo exchange: {x.shape} -> {ext.shape} (per-dim +width*shards)")
+# plan.exchange is differentiable: its VJP is the fused force-return path
+grad = jax.grad(lambda a: jnp.sum(plan.exchange(a) ** 2))(x)
+print(f"grad through plan.exchange: {grad.shape} (fused reverse path)")
 
 # --- the MD reproduction ----------------------------------------------------
 system = make_grappa_like(1200, seed=0)
 print(f"grappa-like system: {system.n_atoms} atoms, box {system.box[0]:.2f}")
-for mode in ("serialized", "fused"):
-    eng = MDEngine(system, mesh, mode=mode)
+for backend in ("serialized", "fused"):
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                    backend=backend)
+    eng = MDEngine(system, mesh, spec)
     _, metrics, _ = eng.simulate(20)
     E = metrics["pe"] + metrics["ke"]
-    print(f"{mode:11s}: E0={E[0]:9.3f}  E20={E[-1]:9.3f}  "
+    print(f"{backend:11s}: E0={E[0]:9.3f}  E20={E[-1]:9.3f}  "
           f"drift/atom={(E.max() - E.min()) / system.n_atoms:.2e}")
 
-# --- what the fused schedule buys (napkin math from the pulse schedule) ----
-sched = make_schedule(("z", "y", "x"), (1, 1, 1))
-stats = halo.exchange_stats(sched, (8, 8, 8), itemsize=4, feature_elems=4)
+# --- what the fused schedule buys (napkin math from the plan) ---------------
+md_plan = HaloPlan.build(
+    HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+             dtype="float32", feature_elems=4), mesh)
+stats = md_plan.stats((8, 8, 8))
+print(f"total halo bytes:         {stats['total_bytes']}")
 print(f"serialized chained bytes: {stats['serialized_critical_bytes']}")
 print(f"fused chained bytes:      {stats['fused_critical_bytes']} "
       f"({stats['fused_critical_bytes'] / stats['serialized_critical_bytes']:.0%})")

@@ -98,8 +98,37 @@ def variants_table(cells):
                   f"{c['fraca']:.4f} |")
 
 
+def halo_table():
+    """Plan-reported halo bytes per DD dimensionality (halo__*.json).
+
+    Numbers come straight from ``HaloPlan.stats`` as recorded by
+    ``python -m repro.launch.dryrun --halo`` — no local recomputation —
+    with the compiled-HLO collective bytes as a cross-check column.
+    """
+    print("\n| dd | backend | total B | chained B | chained/total | "
+          "dep frac | HLO coll B/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for p in sorted(DRY.glob("halo__*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | FAIL "
+                  f"{r.get('error', '')[:40]} |" + " |" * 4)
+            continue
+        st = r["plan_stats"]
+        chained = (st["serialized_critical_bytes"]
+                   if r["backend"] == "serialized"
+                   else st["fused_critical_bytes"])
+        coll = r["hlo_collective_bytes"] / max(r["devices"], 1)
+        print(f"| {r['dd']} | {r['backend']} | {st['total_bytes']} | "
+              f"{chained} | {chained / max(st['total_bytes'], 1):.3f} | "
+              f"{st['dependent_fraction']:.4f} | {coll:.3e} |")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "halo"):
+        print("\n## Halo exchange (plan-reported)")
+        halo_table()
     if which in ("all", "dryrun"):
         print("## Dry-run status")
         dryrun_table("single")

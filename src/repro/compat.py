@@ -1,0 +1,67 @@
+"""Compatibility shims across jax versions (0.4.x .. 0.6.x).
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.set_mesh``); older runtimes only ship the
+experimental spellings.  Import the symbols from here so every module works
+on both.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:  # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``shard_map`` accepting both kwarg spellings of the replication
+    check (``check_rep`` in jax<=0.5, ``check_vma`` later)."""
+    if "check_vma" in kwargs and "check_vma" not in _SM_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "check_rep" in kwargs and "check_rep" not in _SM_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict across jax versions (older
+    jaxlibs return a one-element list of dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+
+    def mesh_axis_types(n: int):
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # jax 0.4.x: meshes are Auto-typed implicitly
+    AxisType = None
+
+    def mesh_axis_types(n: int):
+        return {}
+
+
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off.
+
+    Pallas calls have no replication rule, so bodies that may invoke them
+    (the halo-plan backends) disable the check.
+    """
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` where available, else the Mesh context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh

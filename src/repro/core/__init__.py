@@ -1,4 +1,10 @@
-"""Core: the paper's fused halo-exchange algorithm and MD substrate."""
+"""Core: the paper's fused halo-exchange algorithm and MD substrate.
+
+The public halo API is plan-based: build a :class:`HaloPlan` from a frozen
+:class:`HaloSpec` once, then execute it every step.  The four loose
+``exchange_*`` functions remain exported as backend implementations;
+``halo_exchange``/``exchange_stats`` are deprecated shims.
+"""
 from repro.core.halo import (
     exchange_fwd_fused,
     exchange_fwd_serialized,
@@ -7,12 +13,24 @@ from repro.core.halo import (
     exchange_stats,
     halo_exchange,
 )
+from repro.core.halo_plan import (
+    HaloPlan,
+    HaloSpec,
+    available_backends,
+    compute_exchange_stats,
+    register_backend,
+)
 from repro.core.schedule import Pulse, PulseSchedule, make_schedule
 
 __all__ = [
     "Pulse",
     "PulseSchedule",
     "make_schedule",
+    "HaloSpec",
+    "HaloPlan",
+    "register_backend",
+    "available_backends",
+    "compute_exchange_stats",
     "halo_exchange",
     "exchange_fwd_fused",
     "exchange_fwd_serialized",

@@ -27,20 +27,21 @@ Reverse (force) exchanges are the exact linear adjoints, walking the
 dependency chain backwards (paper Alg. 6) and accumulating contributions.
 
 All four exchange functions are *device-local*: they must be called inside
-a ``shard_map`` over the decomposition axes.  :func:`halo_exchange` is a
-convenience wrapper that applies the shard_map for you.
+a ``shard_map`` over the decomposition axes.  The public entry point is
+:class:`repro.core.halo_plan.HaloPlan`, which binds a schedule + mesh +
+backend once and exposes shard-mapped and differentiable wrappers; the
+:func:`halo_exchange` function below is a deprecated per-call shim.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.schedule import PulseSchedule, make_schedule
+from repro.core.schedule import PulseSchedule
 
 Region = Tuple[int, ...]
 
@@ -246,7 +247,7 @@ def exchange_rev_fused(ext: jnp.ndarray, sched: PulseSchedule,
 
 
 # --------------------------------------------------------------------------
-# public wrapper
+# deprecated wrappers (use repro.core.halo_plan.HaloPlan instead)
 # --------------------------------------------------------------------------
 
 def halo_exchange(x: jax.Array, mesh: Mesh, axis_names: Sequence[str],
@@ -254,84 +255,47 @@ def halo_exchange(x: jax.Array, mesh: Mesh, axis_names: Sequence[str],
                   direction: str = "fwd",
                   wrap_shift: Optional[jnp.ndarray] = None,
                   local_shape: Optional[Sequence[int]] = None) -> jax.Array:
-    """Shard-mapped halo exchange over ``mesh``.
+    """Deprecated shim over :class:`repro.core.halo_plan.HaloPlan`.
 
-    ``x`` is sharded over ``axis_names`` on its leading dims.  ``fwd``
-    returns the per-device extended blocks re-stacked along the same axes
-    (global shape grows by ``size_d * w_d`` per dim); ``rev`` consumes such
-    stacked extended blocks and returns the accumulated local array.
+    Build a plan once (``HaloPlan.build(HaloSpec(...), mesh)``) and call
+    ``plan.fwd`` / ``plan.rev`` / ``plan.exchange`` instead; this wrapper
+    rebuilds the plan on every call and exists only for migration.
     """
-    sched = make_schedule(axis_names, widths)
-    sizes = [mesh.shape[a] for a in axis_names]
-    specs = P(*axis_names)
+    import warnings
 
+    from repro.core.halo_plan import HaloPlan, HaloSpec
+
+    warnings.warn(
+        "halo_exchange() is deprecated; build a HaloPlan "
+        "(repro.core.halo_plan) once and call plan.fwd/rev/exchange",
+        DeprecationWarning, stacklevel=2)
+    spec = HaloSpec(axis_names=tuple(axis_names), widths=tuple(widths),
+                    backend=mode)
+    plan = HaloPlan.build(spec, mesh)
     if direction == "fwd":
-        def body(local):
-            fn = exchange_fwd_fused if mode == "fused" else \
-                exchange_fwd_serialized
-            return fn(local, sched, sizes, wrap_shift)
-    elif direction == "rev":
-        if local_shape is None:
-            raise ValueError("rev exchange needs local_shape")
-        def body(local):
-            if mode == "fused":
-                return exchange_rev_fused(local, sched, sizes, local_shape)
-            return exchange_rev_serialized(local, sched, sizes)
-    else:
-        raise ValueError(f"unknown direction {direction!r}")
+        return plan.fwd(x, wrap_shift=wrap_shift)
+    if direction == "rev":
+        return plan.rev(x)
+    raise ValueError(f"unknown direction {direction!r}")
 
-    return jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs)(x)
-
-
-# --------------------------------------------------------------------------
-# analytics (used by benchmarks and the roofline napkin math)
-# --------------------------------------------------------------------------
 
 def exchange_stats(sched: PulseSchedule, local_shape: Sequence[int],
                    itemsize: int, feature_elems: int = 1) -> dict:
-    """Bytes moved per phase/pulse and the two critical-path models.
+    """Deprecated shim over ``halo_plan.compute_exchange_stats``.
 
-    ``serialized_critical_bytes`` sums each pulse's full (forwarding-
-    inclusive) slab — the chained bytes of the MPI design.  For the fused
-    design the per-phase transfers are concurrent, so the chained bytes are
-    ``sum_p max_{region in phase p} bytes(region)``.
+    Returns the legacy key set (including the historical duplicate
+    ``serialized_total_bytes`` / ``fused_total_bytes`` aliases of the
+    canonical ``total_bytes``).  Use :meth:`HaloPlan.stats` instead.
     """
-    ndim = sched.ndim
-    widths = sched.widths
+    import warnings
 
-    def vol(region: Region) -> int:
-        v = 1
-        for d in range(ndim):
-            v *= widths[d] if d in region else local_shape[d]
-        return v * feature_elems * itemsize
+    from repro.core.halo_plan import compute_exchange_stats
 
-    # serialized: pulse d sends the slab of the partially-extended block
-    ser_pulse_bytes = []
-    shape = list(local_shape)
-    for d in range(ndim):
-        slab = 1
-        for k in range(ndim):
-            slab *= widths[d] if k == d else shape[k]
-        ser_pulse_bytes.append(slab * feature_elems * itemsize)
-        shape[d] += widths[d]
-
-    fused_phases = []
-    for phase in sched.forward_phases():
-        fused_phases.append({
-            "regions": [
-                {"dims": r, "bytes": vol(r)} for r in phase
-            ],
-            "phase_bytes": sum(vol(r) for r in phase),
-            "phase_critical_bytes": max((vol(r) for r in phase), default=0),
-        })
-
-    return {
-        "serialized_pulse_bytes": ser_pulse_bytes,
-        "serialized_total_bytes": sum(ser_pulse_bytes),
-        "serialized_critical_bytes": sum(ser_pulse_bytes),
-        "fused_phases": fused_phases,
-        "fused_total_bytes": sum(p["phase_bytes"] for p in fused_phases),
-        "fused_critical_bytes": sum(p["phase_critical_bytes"]
-                                    for p in fused_phases),
-        "dependent_fraction": sched.dependent_fraction(local_shape),
-    }
+    warnings.warn(
+        "exchange_stats() is deprecated; use HaloPlan.stats()",
+        DeprecationWarning, stacklevel=2)
+    stats = dict(compute_exchange_stats(sched, local_shape, itemsize,
+                                        feature_elems))
+    stats["serialized_total_bytes"] = stats["total_bytes"]
+    stats["fused_total_bytes"] = stats["total_bytes"]
+    return stats

@@ -1,0 +1,522 @@
+"""Plan-based halo exchange: one differentiable object, pluggable backends.
+
+The paper's core design is a *persistent, pre-planned* exchange: pulse
+metadata (``PulseData``, ``depOffset``, index maps, signal slots) is built
+once at domain-decomposition time and then executed by GPU-initiated
+kernels every step.  This module is that construct-once/execute-many seam
+for the JAX reproduction:
+
+* :class:`HaloSpec` — frozen, hashable description of the exchange (mesh
+  axis names, per-dim halo widths, periodic wrap shifts, dtype / feature
+  layout, backend name).
+
+* :class:`HaloPlan` — built via :meth:`HaloPlan.build(spec, mesh)`.  It
+  precomputes the :class:`~repro.core.schedule.PulseSchedule`, the per-dim
+  ``ppermute`` pairs, region metadata, byte / critical-path statistics
+  (:meth:`HaloPlan.stats`, absorbing the old ``exchange_stats``), and — for
+  the ``"pallas"`` backend — the static index maps feeding
+  :func:`repro.kernels.halo_pack.pack` / ``unpack_add``.
+
+* ``plan.fwd(x)`` / ``plan.rev(ext)`` — shard-mapped coordinate / force
+  exchanges over global arrays, plus device-local ``fwd_local`` /
+  ``rev_local`` for callers that already sit inside a ``shard_map`` (the
+  MD engine's fused step program).
+
+* ``plan.exchange(x)`` — a ``jax.custom_vjp``-registered exchange whose
+  adjoint *is* the fused reverse path (paper Alg. 6): ``jax.grad`` through
+  a coordinate exchange automatically emits the force-return exchange.
+
+Backends are a registry; ``"serialized"`` and ``"fused"`` wrap the staged
+implementations in :mod:`repro.core.halo`, ``"pallas"`` drives the
+pack/put kernels of :mod:`repro.kernels.halo_pack` (interpret mode on CPU,
+with a pure-jnp oracle fallback).  New backends (double-buffered,
+multi-step, NVSHMEM-alike) plug in via :func:`register_backend`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map_norep
+from repro.core import halo as _halo
+from repro.core.schedule import PulseSchedule, make_schedule
+
+Region = Tuple[int, ...]
+
+_UNSET = object()
+
+
+# --------------------------------------------------------------------------
+# spec
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HaloSpec:
+    """Frozen description of a halo exchange (hashable, jit-static).
+
+    ``wrap_shift`` is the per-dimension periodic-image shift added to
+    feature components when data crosses the periodic boundary (the
+    paper's ``coordShift``); stored as a nested tuple so the spec stays
+    hashable — ``HaloSpec.with_wrap_shift`` converts from arrays.
+    ``dtype``/``feature_elems`` describe the payload layout and feed the
+    default byte accounting in :meth:`HaloPlan.stats`.
+    """
+
+    axis_names: Tuple[str, ...]
+    widths: Tuple[int, ...]
+    backend: str = "fused"
+    wrap_shift: Optional[Tuple[Tuple[float, ...], ...]] = None
+    dtype: str = "float32"
+    feature_elems: int = 1
+    interpret: bool = True   # pallas backend: interpreter mode (CPU/tests)
+
+    def __post_init__(self):
+        object.__setattr__(self, "axis_names", tuple(self.axis_names))
+        object.__setattr__(self, "widths",
+                           tuple(int(w) for w in self.widths))
+        if len(self.axis_names) != len(self.widths):
+            raise ValueError("axis_names and widths must have equal length")
+        if self.wrap_shift is not None:
+            object.__setattr__(
+                self, "wrap_shift",
+                tuple(tuple(float(v) for v in row)
+                      for row in np.asarray(self.wrap_shift)))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.axis_names)
+
+    def with_wrap_shift(self, wrap_shift) -> "HaloSpec":
+        """Return a copy with ``wrap_shift`` taken from an array-like
+        (``__post_init__`` re-normalizes to the hashable nested tuple)."""
+        return dataclasses.replace(self, wrap_shift=wrap_shift)
+
+    def wrap_shift_array(self) -> Optional[jnp.ndarray]:
+        if self.wrap_shift is None:
+            return None
+        return jnp.asarray(np.asarray(self.wrap_shift, dtype=self.dtype))
+
+
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+
+class HaloBackend:
+    """Device-local executor: both methods run *inside* a shard_map.
+
+    ``critical_path`` names which of the two chained-bytes models in
+    :meth:`HaloPlan.stats` describes this backend's execution —
+    ``"serialized"`` for pulse-sequential backends, ``"fused"`` for
+    phase-concurrent ones.
+    """
+
+    name: str = "?"
+    critical_path: str = "serialized"
+
+    def fwd(self, plan: "HaloPlan", local: jnp.ndarray,
+            wrap_shift: Optional[jnp.ndarray]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def rev(self, plan: "HaloPlan", ext: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def _local_shape(self, plan: "HaloPlan", ext: jnp.ndarray) -> Tuple[int, ...]:
+        return tuple(ext.shape[d] - plan.spec.widths[d]
+                     for d in range(plan.spec.ndim))
+
+
+class SerializedBackend(HaloBackend):
+    """CPU-initiated MPI baseline: one full slab per pulse, sequential."""
+
+    name = "serialized"
+
+    def fwd(self, plan, local, wrap_shift):
+        return _halo.exchange_fwd_serialized(local, plan.sched,
+                                             plan.axis_sizes, wrap_shift)
+
+    def rev(self, plan, ext):
+        return _halo.exchange_rev_serialized(ext, plan.sched,
+                                             plan.axis_sizes)
+
+
+class FusedBackend(HaloBackend):
+    """GPU-initiated fused redesign: dependency-partitioned phases."""
+
+    name = "fused"
+    critical_path = "fused"
+
+    def fwd(self, plan, local, wrap_shift):
+        return _halo.exchange_fwd_fused(local, plan.sched, plan.axis_sizes,
+                                        wrap_shift)
+
+    def rev(self, plan, ext):
+        return _halo.exchange_rev_fused(ext, plan.sched, plan.axis_sizes,
+                                        self._local_shape(plan, ext))
+
+
+class PallasBackend(HaloBackend):
+    """Pack/unpack through the Pallas kernels of ``kernels.halo_pack``.
+
+    Realizes each pulse as pack (device-initiated gather into a contiguous
+    send buffer, paper Alg. 3 line 7) -> ``ppermute`` (the put) ->
+    concat / scatter-add (the unpack).  Index maps are static per local
+    shape and cached on the plan — the analogue of the paper's DD-time
+    index-map build.  Falls back to pure-jnp oracles when the Pallas
+    kernels are unavailable on the current backend.  Pulses execute in
+    serialized (forwarding-chained) order, so the serialized
+    critical-path model applies.
+    """
+
+    name = "pallas"
+    critical_path = "serialized"
+
+    # -- kernel dispatch with oracle fallback ------------------------------
+
+    def _pack(self, plan, src2d: jnp.ndarray, idx: np.ndarray) -> jnp.ndarray:
+        jidx = jnp.asarray(idx)
+        if not plan._pallas_broken:
+            try:
+                from repro.kernels import halo_pack
+                return halo_pack.pack(src2d, jidx,
+                                      interpret=plan.spec.interpret)
+            except Exception:  # pragma: no cover - backend-specific
+                plan._pallas_broken = True
+        return jnp.take(src2d, jidx, axis=0)
+
+    def _unpack_add(self, plan, dst2d: jnp.ndarray, idx: np.ndarray,
+                    rows: jnp.ndarray) -> jnp.ndarray:
+        jidx = jnp.asarray(idx)
+        if not plan._pallas_broken:
+            try:
+                from repro.kernels import halo_pack
+                return halo_pack.unpack_add(dst2d, jidx, rows,
+                                            interpret=plan.spec.interpret)
+            except Exception:  # pragma: no cover - backend-specific
+                plan._pallas_broken = True
+        return dst2d.at[jidx].add(rows)
+
+    # -- static index maps (built once per local shape, cached) ------------
+
+    @staticmethod
+    def _rows_along(shape: Sequence[int], d: int, lo: int, hi: int
+                    ) -> np.ndarray:
+        """Row ids of ``reshape(prod(shape[:d+1]), -1)`` whose coordinate
+        along axis ``d`` lies in ``[lo, hi)``."""
+        n_rows = int(np.prod(shape[:d + 1], dtype=np.int64))
+        coord = np.arange(n_rows, dtype=np.int64) % shape[d]
+        return np.nonzero((coord >= lo) & (coord < hi))[0].astype(np.int32)
+
+    def _maps(self, plan, local_shape: Tuple[int, ...]):
+        cached = plan._index_maps.get(local_shape)
+        if cached is not None:
+            return cached
+        widths = plan.spec.widths
+        fwd_maps, rev_maps = [], []
+        shape = list(local_shape)
+        for pulse in plan.sched.serialized_order():
+            d, w = pulse.dim, pulse.width
+            if w:
+                fwd_maps.append(self._rows_along(shape, d, 0, w))
+                shape[d] += w
+            else:
+                fwd_maps.append(None)
+        for pulse in reversed(plan.sched.serialized_order()):
+            d, w = pulse.dim, pulse.width
+            if w:
+                n = shape[d] - w
+                pack_idx = self._rows_along(shape, d, n, shape[d])
+                shape[d] = n
+                add_idx = self._rows_along(shape, d, 0, w)
+                rev_maps.append((pack_idx, add_idx))
+            else:
+                rev_maps.append(None)
+        plan._index_maps[local_shape] = (tuple(fwd_maps), tuple(rev_maps))
+        return plan._index_maps[local_shape]
+
+    # -- exchange ----------------------------------------------------------
+
+    def fwd(self, plan, local, wrap_shift):
+        sched = plan.sched
+        shifter = _halo._Shifter(sched.axis_names, plan.axis_sizes,
+                                 wrap_shift)
+        nd = plan.spec.ndim
+        local_shape = tuple(local.shape[:nd])
+        fwd_maps, _ = self._maps(plan, local_shape)
+        ext = local
+        for pulse, idx in zip(sched.serialized_order(), fwd_maps):
+            if idx is None:
+                continue
+            d, w = pulse.dim, pulse.width
+            shape = ext.shape
+            src2d = ext.reshape(math.prod(shape[:d + 1]), -1)
+            slab = self._pack(plan, src2d, idx).reshape(
+                shape[:d] + (w,) + shape[d + 1:])
+            recv = lax.ppermute(slab, sched.axis_names[d], plan.fwd_perms[d])
+            recv = shifter(recv, d)
+            ext = jnp.concatenate([ext, recv], axis=d)
+        return ext
+
+    def rev(self, plan, ext):
+        sched = plan.sched
+        nd = plan.spec.ndim
+        local_shape = self._local_shape(plan, ext)
+        _, rev_maps = self._maps(plan, local_shape)
+        out = ext
+        for pulse, maps in zip(reversed(sched.serialized_order()), rev_maps):
+            if maps is None:
+                continue
+            pack_idx, add_idx = maps
+            d, w = pulse.dim, pulse.width
+            shape = out.shape
+            n = shape[d] - w
+            src2d = out.reshape(math.prod(shape[:d + 1]), -1)
+            halo_rows = self._pack(plan, src2d, pack_idx)
+            slab = halo_rows.reshape(shape[:d] + (w,) + shape[d + 1:])
+            recv = lax.ppermute(slab, sched.axis_names[d], plan.rev_perms[d])
+            body = lax.slice_in_dim(out, 0, n, axis=d)
+            bshape = body.shape
+            body2d = body.reshape(math.prod(bshape[:d + 1]), -1)
+            rows = recv.reshape(add_idx.shape[0], -1)
+            body2d = self._unpack_add(plan, body2d, add_idx, rows)
+            out = body2d.reshape(bshape)
+        return out
+
+
+_BACKENDS: Dict[str, Callable[[], HaloBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], HaloBackend]) -> None:
+    """Register a halo backend under ``name`` (the config axis value)."""
+    _BACKENDS[name] = factory
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name: str) -> HaloBackend:
+    try:
+        return _BACKENDS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown halo backend {name!r}; "
+            f"available: {available_backends()}") from None
+
+
+register_backend("serialized", SerializedBackend)
+register_backend("fused", FusedBackend)
+register_backend("pallas", PallasBackend)
+
+
+# --------------------------------------------------------------------------
+# byte / critical-path accounting (absorbs the old halo.exchange_stats)
+# --------------------------------------------------------------------------
+
+def compute_exchange_stats(sched: PulseSchedule,
+                           local_shape: Sequence[int],
+                           itemsize: int,
+                           feature_elems: int = 1) -> dict:
+    """Bytes moved per phase/pulse and the two critical-path models.
+
+    Both designs move the same regions, hence the single ``total_bytes``.
+    The serialized design chains every pulse's full (forwarding-inclusive)
+    slab, so its critical path *is* the total; the fused design overlaps
+    each phase's transfers, chaining only ``max`` bytes per phase.
+    """
+    ndim = sched.ndim
+    widths = sched.widths
+
+    def vol(region: Region) -> int:
+        v = 1
+        for d in range(ndim):
+            v *= widths[d] if d in region else local_shape[d]
+        return v * feature_elems * itemsize
+
+    ser_pulse_bytes = []
+    shape = list(local_shape)
+    for d in range(ndim):
+        slab = 1
+        for k in range(ndim):
+            slab *= widths[d] if k == d else shape[k]
+        ser_pulse_bytes.append(slab * feature_elems * itemsize)
+        shape[d] += widths[d]
+
+    fused_phases = []
+    for phase in sched.forward_phases():
+        fused_phases.append({
+            "regions": [{"dims": r, "bytes": vol(r)} for r in phase],
+            "phase_bytes": sum(vol(r) for r in phase),
+            "phase_critical_bytes": max((vol(r) for r in phase), default=0),
+        })
+
+    total = sum(p["phase_bytes"] for p in fused_phases)
+    assert total == sum(ser_pulse_bytes), "slab/region accounting mismatch"
+    return {
+        "total_bytes": total,
+        "serialized_pulse_bytes": ser_pulse_bytes,
+        # fully sequential: the chained bytes are all of them
+        "serialized_critical_bytes": sum(ser_pulse_bytes),
+        "fused_phases": fused_phases,
+        "fused_critical_bytes": sum(p["phase_critical_bytes"]
+                                    for p in fused_phases),
+        "dependent_fraction": sched.dependent_fraction(local_shape),
+    }
+
+
+# --------------------------------------------------------------------------
+# plan
+# --------------------------------------------------------------------------
+
+class HaloPlan:
+    """Construct-once / execute-many halo exchange bound to a mesh.
+
+    Build with :meth:`HaloPlan.build`; execute with :meth:`fwd` /
+    :meth:`rev` / :meth:`exchange` (global arrays) or :meth:`fwd_local` /
+    :meth:`rev_local` (inside an enclosing ``shard_map``).
+    """
+
+    def __init__(self, spec: HaloSpec, mesh: Mesh):
+        for a in spec.axis_names:
+            if a not in mesh.shape:
+                raise ValueError(f"mesh has no axis {a!r}; "
+                                 f"mesh axes: {tuple(mesh.shape)}")
+        self.spec = spec
+        self.mesh = mesh
+        self.backend = get_backend(spec.backend)
+        self.sched: PulseSchedule = make_schedule(spec.axis_names,
+                                                  spec.widths)
+        self.axis_sizes: Tuple[int, ...] = tuple(
+            int(mesh.shape[a]) for a in spec.axis_names)
+        # per-dim ppermute pairs, precomputed once (the plan's PulseData)
+        self.fwd_perms = tuple(_halo._perm_fwd(n) for n in self.axis_sizes)
+        self.rev_perms = tuple(_halo._perm_rev(n) for n in self.axis_sizes)
+        self.partition_spec = P(*spec.axis_names)
+        self._wrap = spec.wrap_shift_array()
+        self._index_maps: Dict[Tuple[int, ...], Any] = {}
+        self._stats_cache: Dict[Tuple, dict] = {}
+        self._pallas_broken = False
+        self._exchange = self._make_exchange()
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, spec: HaloSpec, mesh: Mesh) -> "HaloPlan":
+        return cls(spec, mesh)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def regions(self) -> Tuple[Region, ...]:
+        return self.sched.regions()
+
+    @property
+    def forward_phases(self):
+        return self.sched.forward_phases()
+
+    @property
+    def reverse_phases(self):
+        return self.sched.reverse_phases()
+
+    def extended_shape(self, local_shape: Sequence[int]) -> Tuple[int, ...]:
+        """Per-device extended-block shape for a given local block shape."""
+        out = list(local_shape)
+        for d, w in enumerate(self.spec.widths):
+            out[d] += w
+        return tuple(out)
+
+    def stats(self, local_shape: Sequence[int],
+              itemsize: Optional[int] = None,
+              feature_elems: Optional[int] = None) -> dict:
+        """Canonical byte/critical-path stats for this plan's schedule.
+
+        Defaults derive from the spec's dtype / feature layout; results are
+        cached per (shape, itemsize, feature_elems).
+        """
+        if itemsize is None:
+            itemsize = int(np.dtype(self.spec.dtype).itemsize)
+        if feature_elems is None:
+            feature_elems = self.spec.feature_elems
+        key = (tuple(local_shape), itemsize, feature_elems)
+        if key not in self._stats_cache:
+            self._stats_cache[key] = compute_exchange_stats(
+                self.sched, tuple(local_shape), itemsize, feature_elems)
+        return self._stats_cache[key]
+
+    # -- device-local execution (inside an enclosing shard_map) ------------
+
+    def _resolve_shift(self, wrap_shift):
+        if wrap_shift is _UNSET:
+            wrap_shift = self._wrap
+        if wrap_shift is None:
+            return None
+        return jnp.asarray(wrap_shift)
+
+    def fwd_local(self, local: jnp.ndarray, wrap_shift=_UNSET) -> jnp.ndarray:
+        """Coordinate exchange on one device's block (needs shard_map)."""
+        shift = self._resolve_shift(wrap_shift)
+        return self.backend.fwd(self, local, shift)
+
+    def rev_local(self, ext: jnp.ndarray) -> jnp.ndarray:
+        """Force-return exchange on one device's extended block."""
+        return self.backend.rev(self, ext)
+
+    # -- global execution (plan applies the shard_map) ---------------------
+
+    def _shard(self, body):
+        spec = self.partition_spec
+        return shard_map_norep(body, mesh=self.mesh, in_specs=spec,
+                               out_specs=spec)
+
+    def fwd(self, x: jax.Array, wrap_shift=_UNSET) -> jax.Array:
+        """Shard-mapped coordinate exchange over ``mesh``.
+
+        ``x`` is sharded over the spec's axis names on its leading dims;
+        the result re-stacks the per-device extended blocks (global shape
+        grows by ``size_d * w_d`` per dim).
+        """
+        shift = self._resolve_shift(wrap_shift)
+        return self._shard(lambda lo: self.backend.fwd(self, lo, shift))(x)
+
+    def rev(self, ext: jax.Array) -> jax.Array:
+        """Shard-mapped force-return exchange (adjoint of :meth:`fwd`)."""
+        return self._shard(lambda e: self.backend.rev(self, e))(ext)
+
+    def exchange(self, x: jax.Array) -> jax.Array:
+        """Differentiable exchange: the VJP *is* the reverse exchange.
+
+        ``jax.grad`` through ``plan.exchange`` emits this plan's fused
+        (or backend-selected) force-return path instead of XLA's
+        transpose of the forward collectives — paper Alg. 6 as an
+        autodiff rule.
+        """
+        return self._exchange(x)
+
+    def _make_exchange(self):
+        @jax.custom_vjp
+        def exchange(x):
+            return self.fwd(x)
+
+        def exchange_fwd(x):
+            # the exchange is affine in x (wrap shifts are constants), so
+            # no residuals are needed: the VJP is the exact linear adjoint
+            return self.fwd(x), None
+
+        def exchange_bwd(_, g):
+            return (self.rev(g),)
+
+        exchange.defvjp(exchange_fwd, exchange_bwd)
+        return exchange
+
+    def __repr__(self):
+        return (f"HaloPlan(backend={self.spec.backend!r}, "
+                f"axes={self.spec.axis_names}, widths={self.spec.widths}, "
+                f"mesh={dict(self.mesh.shape)})")

@@ -20,6 +20,7 @@ State layout per device (all static shapes):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Tuple
 
@@ -29,61 +30,81 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import halo
+from repro.compat import shard_map_norep
+
+from repro.core.halo_plan import HaloPlan, HaloSpec
 from repro.core.md import integrate
 from repro.core.md.cells import CellLayout, choose_layout
 from repro.core.md.domain import AXES, domain_index, rebin
 from repro.core.md.forces import compute_forces
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
-from repro.core.schedule import make_schedule
 
 
 class MDEngine:
-    """Binds a system + mesh + halo mode into jitted step/rebin programs."""
+    """Binds a system + mesh + HaloSpec into jitted step/rebin programs.
 
-    def __init__(self, system: MDSystem, mesh: Mesh, mode: str = "fused",
+    ``spec`` selects the halo backend and widths; the engine fills in the
+    physics the spec leaves open (periodic wrap shifts from the box) and
+    builds one :class:`HaloPlan` reused by every step/rebin/force program.
+    """
+
+    def __init__(self, system: MDSystem, mesh: Mesh,
+                 spec: HaloSpec | None = None,
                  r_list_factor: float = 1.08, mig_frac: float = 0.125):
-        if mode not in ("fused", "serialized"):
-            raise ValueError(mode)
+        if spec is None:
+            spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
+        if spec.axis_names != tuple(AXES):
+            raise ValueError(f"MD halo spec must decompose over {AXES}, "
+                             f"got {spec.axis_names}")
         self.system = system
         self.mesh = mesh
-        self.mode = mode
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
         self.layout = choose_layout(system.box, mesh_shape, r_list,
                                     system.n_atoms)
-        self.sched = make_schedule(AXES, (1, 1, 1))
         self.axis_sizes = mesh_shape
         self.mig_cap = max(64, int(self.layout.pool * mig_frac))
         dt = system.pos.dtype
-        ws = np.zeros((3, 4), dt)
-        for d in range(3):
-            ws[d, d] = system.box[d]
-        self.wrap_shift = jnp.asarray(ws)
+        if spec.wrap_shift is None:
+            ws = np.zeros((3, 4), dt)
+            for d in range(3):
+                ws[d, d] = system.box[d]
+            spec = spec.with_wrap_shift(ws)
+        # feature layout for byte accounting: each exchanged cell carries
+        # `capacity` atom slots of 4 floats (x, y, z, charge); the (K, 2)
+        # int32 cell_i exchange is excluded from the canonical stats
+        self.plan = HaloPlan.build(
+            dataclasses.replace(spec, dtype=np.dtype(dt).name,
+                                feature_elems=4 * self.layout.capacity),
+            mesh)
         self._spec = P(*AXES)
         self._build_programs()
 
-    # ---- halo plumbing -----------------------------------------------------
+    @property
+    def spec(self) -> HaloSpec:
+        return self.plan.spec
 
-    def _fwd(self, arr, wrap_shift=None):
-        fn = (halo.exchange_fwd_fused if self.mode == "fused"
-              else halo.exchange_fwd_serialized)
-        return fn(arr, self.sched, self.axis_sizes, wrap_shift)
+    @property
+    def backend(self) -> str:
+        return self.plan.spec.backend
 
-    def _rev(self, ext):
-        if self.mode == "fused":
-            return halo.exchange_rev_fused(ext, self.sched, self.axis_sizes,
-                                           self.layout.cells_per_domain)
-        return halo.exchange_rev_serialized(ext, self.sched, self.axis_sizes)
+    def halo_stats(self) -> dict:
+        """Plan-reported bytes/critical-path stats at this DD layout."""
+        return self.plan.stats(self.layout.cells_per_domain)
 
     def _force_pass(self, cell_f, cell_i):
-        """Coordinate halo -> forces -> force halo (paper Alg. 3/6)."""
-        ext_f = self._fwd(cell_f[..., :4], self.wrap_shift)
-        ext_i = self._fwd(cell_i)
+        """Coordinate halo -> forces -> force halo (paper Alg. 3/6).
+
+        Runs inside the engine's shard_map, so the plan's device-local
+        methods are used; gradients through this pass would follow the
+        plan's fused reverse path (``HaloPlan.exchange``).
+        """
+        ext_f = self.plan.fwd_local(cell_f[..., :4])
+        ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
         F_ext, pe = compute_forces(ext_f, ext_i, self.layout,
                                    self.system.params.ff)
-        f_local = self._rev(F_ext)
+        f_local = self.plan.rev_local(F_ext)
         return f_local, lax.psum(pe, AXES)
 
     # ---- programs ----------------------------------------------------------
@@ -127,7 +148,7 @@ class MDEngine:
 
         spec = self._spec
         self.block_fn = jax.jit(
-            jax.shard_map(
+            shard_map_norep(
                 functools.partial(block),
                 mesh=self.mesh,
                 in_specs=(spec, spec, spec, None),
@@ -135,10 +156,10 @@ class MDEngine:
             ),
             static_argnums=(3,),
         )
-        self.rebin_fn = jax.jit(jax.shard_map(
+        self.rebin_fn = jax.jit(shard_map_norep(
             do_rebin, mesh=self.mesh, in_specs=(spec, spec),
             out_specs=(spec, spec, spec, P())))
-        self.force_fn = jax.jit(jax.shard_map(
+        self.force_fn = jax.jit(shard_map_norep(
             lambda f, i: self._force_pass(f[..., :4], i),
             mesh=self.mesh, in_specs=(spec, spec), out_specs=(spec, P())))
 

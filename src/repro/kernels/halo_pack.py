@@ -47,7 +47,7 @@ def _pack_kernel(idx_ref, src_ref, out_ref, *, chunk: int, feat: int):
     valid = idx >= 0
     safe = jnp.maximum(idx, 0)
     rows = src_ref[safe, :]                      # gathered chunk
-    rows = jnp.where(valid[:, None], rows, 0.0)
+    rows = jnp.where(valid[:, None], rows, jnp.zeros((), rows.dtype))
     out_ref[pl.ds(c * chunk, chunk), :] = rows
 
 
@@ -68,6 +68,49 @@ def pack(src: jax.Array, index_map: jax.Array, chunk: int = 128,
         out_shape=jax.ShapeDtypeStruct((M, F), src.dtype),
         interpret=interpret,
     )(index_map, src)
+
+
+# --------------------------------------------------------------------------
+# 1b. unpack kernel: scatter-add received rows back by index map
+# --------------------------------------------------------------------------
+
+def _unpack_add_kernel(idx_ref, rows_ref, dst_ref, out_ref, *, chunk: int):
+    """Grid step c: out[idx[c*C:(c+1)*C]] += rows[c*C:(c+1)*C].
+
+    The reverse-path unpack (paper's CommUnpackF): received force rows are
+    accumulated into the destination selected by the index map.  Indices
+    must be non-negative and unique (halo-plan index maps are dense and
+    collision-free by construction); grid step 0 seeds the output with the
+    destination buffer.
+    """
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _():
+        out_ref[...] = dst_ref[...]
+
+    idx = idx_ref[pl.ds(c * chunk, chunk)]
+    rows = rows_ref[pl.ds(c * chunk, chunk), :]
+    out_ref[idx, :] = out_ref[idx, :] + rows
+
+
+def unpack_add(dst: jax.Array, index_map: jax.Array, rows: jax.Array,
+               chunk: int = 128, interpret: bool = True) -> jax.Array:
+    """Scatter-add ``rows`` (M, F) into ``dst`` (P, F) at ``index_map``."""
+    M = index_map.shape[0]
+    chunk = min(chunk, M)
+    while M % chunk:
+        chunk -= 1
+    return pl.pallas_call(
+        functools.partial(_unpack_add_kernel, chunk=chunk),
+        grid=(M // chunk,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        interpret=interpret,
+    )(index_map, rows, dst)
 
 
 # --------------------------------------------------------------------------

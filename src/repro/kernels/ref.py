@@ -16,6 +16,15 @@ def pack_ref(src: np.ndarray, index_map: np.ndarray) -> np.ndarray:
     return rows
 
 
+# ---- halo_pack.unpack_add --------------------------------------------------
+
+def unpack_add_ref(dst: np.ndarray, index_map: np.ndarray,
+                   rows: np.ndarray) -> np.ndarray:
+    out = np.array(dst, copy=True)
+    np.add.at(out, index_map, rows)
+    return out
+
+
 # ---- halo_pack.put_signal (ring exchange oracle across shards) -------------
 
 def put_signal_ref(srcs, index_maps):

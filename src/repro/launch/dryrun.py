@@ -28,6 +28,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
@@ -58,9 +59,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if overrides and k in overrides:
             kw[k] = overrides[k]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
-            kw.pop("zero2", None) if shape.kind != "train" else None
             prog = make_train_step(cfg, shape, ctx,
                                    microbatches=(overrides or {})
                                    .get("microbatches"),
@@ -115,7 +115,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None,
             "argument_size_in_bytes", "output_size_in_bytes",
             "temp_size_in_bytes", "alias_size_in_bytes",
             "generated_code_size_in_bytes")}
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         cost_d = {k: float(v) for k, v in cost.items()
                   if isinstance(v, (int, float)) and
                   k in ("flops", "bytes accessed")}
@@ -192,6 +192,79 @@ def cell_path(arch, shape, mesh_name, tag=""):
     return RESULTS / f"{arch}__{shape}__{mesh_name}{tag}.json"
 
 
+# ---- halo-plan cells (paper Fig. 5 analogue, compiled) -----------------------
+
+HALO_DD = {"1d": (4, 1, 1), "2d": (4, 4, 1), "3d": (4, 4, 4)}
+HALO_BACKENDS = ("serialized", "fused")
+
+
+def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
+                  verbose: bool = True):
+    """Lower + compile one HaloPlan.fwd cell and record plan + HLO stats.
+
+    The plan-reported byte/critical-path numbers are the canonical ones
+    (results/make_tables.py reads them); the compiled-HLO collective bytes
+    cross-check that XLA moves what the plan says it moves.
+    """
+    from repro.core.halo_plan import HaloPlan, HaloSpec
+    from repro.launch.mesh import make_mesh
+
+    t0 = time.time()
+    record = {"kind": "halo", "dd": dd_name, "backend": backend,
+              "local": list(local), "ok": False}
+    try:
+        dd = HALO_DD[dd_name]
+        mesh = make_mesh(dd, ("z", "y", "x"))
+        # width 0 on non-decomposed dims: a 1D DD exchanges z-slabs only
+        widths = tuple(1 if n > 1 else 0 for n in dd)
+        spec = HaloSpec(axis_names=("z", "y", "x"), widths=widths,
+                        backend=backend, dtype="float32",
+                        feature_elems=feat)
+        plan = HaloPlan.build(spec, mesh)
+        gshape = tuple(n * d for n, d in zip(local, dd)) + (feat,)
+        arg = jax.ShapeDtypeStruct(gshape, np.float32)
+        lowered = jax.jit(lambda a: plan.fwd(a)).lower(arg)
+        compiled = lowered.compile()
+        parsed = hlo_analysis.analyze(compiled.as_text())
+        record.update({
+            "ok": True,
+            "devices": int(np.prod(dd)),
+            "plan_stats": plan.stats(local),
+            "hlo_collective_bytes": parsed["collective_bytes"],
+            "hlo_bytes": parsed["bytes"],
+        })
+        if verbose:
+            st = record["plan_stats"]
+            print(f"  plan: total={st['total_bytes']} "
+                  f"ser_crit={st['serialized_critical_bytes']} "
+                  f"fused_crit={st['fused_critical_bytes']}")
+            print(f"  hlo collective bytes: {parsed['collective_bytes']:.3e}")
+    except Exception as e:  # noqa: BLE001
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(record["traceback"])
+    finally:
+        record["wall_s"] = round(time.time() - t0, 1)
+        jax.clear_caches()
+    return record
+
+
+def run_halo_cells(force: bool = False):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    for dd_name in HALO_DD:
+        for backend in HALO_BACKENDS:
+            path = RESULTS / f"halo__{dd_name}__{backend}.json"
+            if path.exists() and not force:
+                print(f"[skip] {path.name} exists")
+                continue
+            print(f"[halo] {dd_name} x {backend}", flush=True)
+            rec = run_halo_cell(dd_name, backend)
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
+                  f"({rec['wall_s']}s)", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -202,6 +275,8 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--summarize", action="store_true")
+    ap.add_argument("--halo", action="store_true",
+                    help="compile HaloPlan cells (results/dryrun/halo__*)")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--pod-compress", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
@@ -212,6 +287,9 @@ def main():
 
     if args.summarize:
         summarize()
+        return
+    if args.halo:
+        run_halo_cells(force=args.force)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,54 @@
+"""Stand-ins so property-based tests skip cleanly without ``hypothesis``.
+
+``hypothesis`` is a dev extra (``pip install -e .[dev]``); the tier-1 suite
+must collect without it.  Modules import via::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+
+With the stub, ``@given(...)`` replaces the test body with a skip, and the
+strategy expressions evaluated at module import become inert placeholders.
+"""
+import pytest
+
+
+class _Strategy:
+    """Inert placeholder: any attribute/call returns another placeholder."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+class _Strategies:
+    def composite(self, fn):
+        return _Strategy()
+
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = _Strategies()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # deliberately parameterless: the wrapped test's arguments are
+        # hypothesis-drawn, and pytest must not mistake them for fixtures
+        def skipper():
+            pytest.skip("hypothesis not installed (pip install -e .[dev])")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco

@@ -1,7 +1,11 @@
 """Data pipeline: determinism, host sharding, checkpointable state."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; hypothesis is a dev extra
+    from _hypothesis_stub import given, settings, st
 
 from repro.data.synthetic import DataConfig, SyntheticStream, _batch_at
 

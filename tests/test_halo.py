@@ -1,12 +1,17 @@
 """Halo exchange: schedule properties (hypothesis) + multi-device equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; hypothesis is a dev extra
+    from _hypothesis_stub import given, settings, st
 
 import jax.numpy as jnp
 
-from repro.core.halo import exchange_stats, halo_exchange
+from repro.core.halo import halo_exchange
+from repro.core.halo_plan import HaloPlan, HaloSpec, compute_exchange_stats
 from repro.core.schedule import make_schedule
 from repro.launch.mesh import make_mesh
 
@@ -56,12 +61,17 @@ def test_pulse_dependency_chain(case):
 @given(schedule_case())
 @settings(max_examples=60, deadline=None)
 def test_exchange_stats_byte_conservation(case):
-    """Fused and serialized schedules move identical total bytes; the fused
-    chained (critical-path) bytes never exceed the serialized ones."""
+    """Fused and serialized schedules move identical total bytes (the single
+    canonical ``total_bytes``); the fused chained (critical-path) bytes
+    never exceed the serialized ones."""
     names, widths, shape = case
     sched = make_schedule(names, widths)
-    stats = exchange_stats(sched, shape, itemsize=4, feature_elems=3)
-    assert stats["fused_total_bytes"] == stats["serialized_total_bytes"]
+    stats = compute_exchange_stats(sched, shape, itemsize=4,
+                                   feature_elems=3)
+    assert stats["serialized_critical_bytes"] == stats["total_bytes"]
+    assert sum(stats["serialized_pulse_bytes"]) == stats["total_bytes"]
+    assert sum(p["phase_bytes"] for p in stats["fused_phases"]) == \
+        stats["total_bytes"]
     assert stats["fused_critical_bytes"] <= stats["serialized_critical_bytes"]
     assert 0.0 <= stats["dependent_fraction"] < 1.0
     if len(names) == 1:
@@ -89,16 +99,30 @@ def test_dependent_fraction_matches_paper_intuition():
 def test_single_domain_periodic_self_halo():
     mesh = make_mesh((1,), ("z",))
     x = jnp.arange(24, dtype=jnp.float32).reshape(6, 4)
-    shift = jnp.asarray([[100.0, 0.0, 0.0, 0.0]])
-    out = halo_exchange(x, mesh, ("z",), (2,), mode="fused",
-                        wrap_shift=shift)
+    shift = np.asarray([[100.0, 0.0, 0.0, 0.0]])
+    plan = HaloPlan.build(
+        HaloSpec(axis_names=("z",), widths=(2,), backend="fused",
+                 wrap_shift=shift), mesh)
+    out = plan.fwd(x)
     # halo rows are this domain's own first rows, shifted by the box image
     np.testing.assert_allclose(np.asarray(out[:6]), np.asarray(x))
     np.testing.assert_allclose(np.asarray(out[6:]),
                                np.asarray(x[:2] + shift[0]))
-    ser = halo_exchange(x, mesh, ("z",), (2,), mode="serialized",
-                        wrap_shift=shift)
+    ser = HaloPlan.build(
+        HaloSpec(axis_names=("z",), widths=(2,), backend="serialized",
+                 wrap_shift=shift), mesh).fwd(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ser))
+
+
+def test_halo_exchange_shim_is_deprecated_but_equivalent():
+    mesh = make_mesh((1,), ("z",))
+    x = jnp.arange(24, dtype=jnp.float32).reshape(6, 4)
+    plan = HaloPlan.build(
+        HaloSpec(axis_names=("z",), widths=(2,), backend="fused"), mesh)
+    with pytest.warns(DeprecationWarning):
+        legacy = halo_exchange(x, mesh, ("z",), (2,), mode="fused")
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(plan.fwd(x)))
 
 
 # --------------------------------------------------------------------------

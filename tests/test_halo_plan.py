@@ -1,0 +1,176 @@
+"""HaloPlan: backend registry, adjoint property, custom VJP, plan stats."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.halo_plan import (
+    HaloPlan,
+    HaloSpec,
+    available_backends,
+    get_backend,
+)
+from repro.launch.mesh import make_mesh
+
+BACKENDS = ("serialized", "fused", "pallas")
+
+
+@pytest.fixture(scope="module")
+def mesh1d():
+    return make_mesh((1,), ("z",))
+
+
+def _plan(backend, widths=(2,), mesh=None, **kw):
+    mesh = mesh if mesh is not None else make_mesh((1,) * len(widths),
+                                                   ("z", "y", "x")[:len(widths)])
+    spec = HaloSpec(axis_names=("z", "y", "x")[:len(widths)],
+                    widths=widths, backend=backend, **kw)
+    return HaloPlan.build(spec, mesh)
+
+
+# --------------------------------------------------------------------------
+# spec / registry basics
+# --------------------------------------------------------------------------
+
+def test_spec_is_frozen_and_hashable():
+    spec = HaloSpec(axis_names=("z",), widths=(2,),
+                    wrap_shift=np.ones((1, 4)))
+    assert isinstance(hash(spec), int)
+    with pytest.raises(Exception):
+        spec.widths = (3,)
+    # wrap shift round-trips through the hashable nested-tuple form
+    np.testing.assert_array_equal(np.asarray(spec.wrap_shift_array()),
+                                  np.ones((1, 4), np.float32))
+
+
+def test_backend_registry():
+    assert set(BACKENDS) <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown halo backend"):
+        get_backend("nvshmem-tbd")
+    with pytest.raises(ValueError, match="unknown halo backend"):
+        HaloPlan.build(HaloSpec(("z",), (1,), backend="nope"),
+                       make_mesh((1,), ("z",)))
+
+
+def test_plan_rejects_missing_mesh_axis(mesh1d):
+    with pytest.raises(ValueError, match="no axis"):
+        HaloPlan.build(HaloSpec(("q",), (1,)), mesh1d)
+
+
+def test_extended_shape(mesh1d):
+    plan = _plan("fused", widths=(2,), mesh=mesh1d)
+    assert plan.extended_shape((6, 4)) == (8, 4)
+
+
+# --------------------------------------------------------------------------
+# adjoint property: <fwd(x), y> == <x, rev(y)> for every backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("width,n,f", [(1, 5, 3), (2, 6, 4), (3, 9, 2)])
+def test_adjoint_dot_product(backend, width, n, f, mesh1d):
+    plan = _plan(backend, widths=(width,), mesh=mesh1d)
+    rng = np.random.RandomState(width * 10 + n)
+    x = jnp.asarray(rng.randn(n, f).astype(np.float32))
+    y = jnp.asarray(rng.randn(n + width, f).astype(np.float32))
+    lhs = float(jnp.vdot(plan.fwd(x), y))
+    rhs = float(jnp.vdot(x, plan.rev(y)))
+    assert abs(lhs - rhs) <= 1e-5 * max(abs(lhs), 1.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_bitwise_identical_fwd(backend, mesh1d):
+    """Single-device periodic self-exchange: every backend must reproduce
+    the serialized bytes exactly (the multi-device version runs in
+    tests/dist/check_halo_plan.py on an 8-device mesh)."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(6, 5).astype(np.float32))
+    shift = np.zeros((1, 5)); shift[0, 0] = 17.0
+    ref = np.asarray(_plan("serialized", widths=(2,), mesh=mesh1d,
+                           wrap_shift=shift).fwd(x))
+    got = np.asarray(_plan(backend, widths=(2,), mesh=mesh1d,
+                           wrap_shift=shift).fwd(x))
+    np.testing.assert_array_equal(got, ref)
+
+
+# --------------------------------------------------------------------------
+# custom VJP: grad through plan.exchange is the plan's reverse path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_grad_through_exchange_matches_serialized_autodiff(backend, mesh1d):
+    plan = _plan(backend, widths=(2,), mesh=mesh1d)
+    ser = _plan("serialized", widths=(2,), mesh=mesh1d)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(6, 4).astype(np.float32))
+    y = jnp.asarray(rng.randn(8, 4).astype(np.float32))
+
+    g_plan = jax.grad(lambda a: jnp.sum(plan.exchange(a) * y))(x)
+    # reference: plain autodiff (XLA transpose) of the serialized forward
+    g_ref = jax.grad(lambda a: jnp.sum(ser.fwd(a) * y))(x)
+    np.testing.assert_allclose(np.asarray(g_plan), np.asarray(g_ref),
+                               atol=1e-6)
+
+
+def test_exchange_vjp_is_rev(mesh1d):
+    """The VJP cotangent equals plan.rev(g) exactly — the fused force-return
+    path, not XLA's transposed forward."""
+    plan = _plan("fused", widths=(2,), mesh=mesh1d)
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(6, 4).astype(np.float32))
+    g = jnp.asarray(rng.randn(8, 4).astype(np.float32))
+    _, vjp = jax.vjp(plan.exchange, x)
+    np.testing.assert_array_equal(np.asarray(vjp(g)[0]),
+                                  np.asarray(plan.rev(g)))
+
+
+def test_grad_with_wrap_shift_unaffected(mesh1d):
+    """Wrap shifts are additive constants: they move values, not gradients."""
+    shift = np.zeros((1, 4)); shift[0, 0] = 123.0
+    plan = _plan("fused", widths=(2,), mesh=mesh1d, wrap_shift=shift)
+    plain = _plan("fused", widths=(2,), mesh=mesh1d)
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(6, 4).astype(np.float32))
+    y = jnp.asarray(rng.randn(8, 4).astype(np.float32))
+    g1 = jax.grad(lambda a: jnp.sum(plan.exchange(a) * y))(x)
+    g2 = jax.grad(lambda a: jnp.sum(plain.exchange(a) * y))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# stats: canonical single total, no duplicate aliases
+# --------------------------------------------------------------------------
+
+def test_plan_stats_canonical_keys(mesh1d):
+    plan = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float32",
+                 feature_elems=4)
+    stats = plan.stats((6,))
+    assert stats["total_bytes"] == 2 * 4 * 4        # w * feat * itemsize
+    assert "serialized_total_bytes" not in stats     # legacy duplicate gone
+    assert "fused_total_bytes" not in stats
+    assert stats["serialized_critical_bytes"] == stats["total_bytes"]
+    # cached: same dict object for same key
+    assert plan.stats((6,)) is stats
+
+
+def test_legacy_exchange_stats_shim_warns():
+    from repro.core.halo import exchange_stats
+    from repro.core.schedule import make_schedule
+    sched = make_schedule(("z", "y"), (1, 1))
+    with pytest.warns(DeprecationWarning):
+        legacy = exchange_stats(sched, (8, 8), itemsize=4)
+    assert legacy["serialized_total_bytes"] == legacy["total_bytes"]
+    assert legacy["fused_total_bytes"] == legacy["total_bytes"]
+
+
+# --------------------------------------------------------------------------
+# multi-device: bitwise backend equivalence + adjoint on an 8-device mesh
+# --------------------------------------------------------------------------
+
+def test_multi_device_backend_equivalence(dist):
+    """Runs in a subprocess with 8 virtual CPU devices (2x2x2 DD mesh);
+    part of tier-1 (not dist-marked) because it is the acceptance bar for
+    the plan API."""
+    out = dist("check_halo_plan.py")
+    assert "check_halo_plan OK" in out

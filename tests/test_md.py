@@ -1,9 +1,14 @@
 """MD engine: single-domain oracle checks in-process; DD checks in subprocess."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; hypothesis is a dev extra
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.halo_plan import HaloSpec
 from repro.core.md import (
     MDEngine,
     direct_forces_reference,
@@ -36,7 +41,9 @@ def small_system():
 @pytest.fixture(scope="module")
 def single_engine(small_system):
     mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
-    return MDEngine(small_system, mesh, mode="fused")
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                    backend="fused")
+    return MDEngine(small_system, mesh, spec)
 
 
 def test_forces_match_direct_oracle(small_system, single_engine):
