@@ -1,7 +1,19 @@
-"""Worker: MD step timing for one (devices, backend, size) cell -> JSON."""
+"""Worker: MD step timing for one (devices, backend, size) cell -> JSON.
+
+Usage (positional args kept for benchmarks/figures.py compatibility):
+
+  python -m benchmarks.md_worker BACKEND N_ATOMS [STEPS]
+      [--pipeline {off,double_buffer}] [--halo-width N]
+      [--halo-pulses N] [--out results/dryrun]
+
+Emits one JSON record with per-step timing plus the plan's overlap model
+(``overlapped_bytes``, ``exposed_phases``); with ``--out`` the record is
+also written to ``<out>/md__<backend>__<n>__<pipeline>[__wW][__pP].json``.
+"""
+import argparse
 import json
-import sys
 import time
+from pathlib import Path
 
 import jax
 
@@ -11,19 +23,32 @@ from repro.launch.mesh import make_md_mesh
 
 
 def main():
-    backend = sys.argv[1]
-    n_atoms = int(sys.argv[2])
-    steps = int(sys.argv[3]) if len(sys.argv) > 3 else 40
-    system = make_grappa_like(n_atoms, seed=1)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("backend")
+    ap.add_argument("n_atoms", type=int)
+    ap.add_argument("steps", type=int, nargs="?", default=40)
+    ap.add_argument("--pipeline", default="off",
+                    choices=("off", "double_buffer"))
+    ap.add_argument("--halo-width", type=int, default=1)
+    ap.add_argument("--halo-pulses", type=int, default=1)
+    ap.add_argument("--out", default=None,
+                    help="directory for the JSON record (e.g. "
+                         "results/dryrun)")
+    args = ap.parse_args()
+
+    system = make_grappa_like(args.n_atoms, seed=1)
     mesh = make_md_mesh()
-    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
-                    backend=backend)
-    eng = MDEngine(system, mesh, spec)
+    w = args.halo_width
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(w, w, w),
+                    backend=args.backend,
+                    pulses=None if args.halo_pulses == 1
+                    else (args.halo_pulses,) * 3)
+    eng = MDEngine(system, mesh, spec, pipeline=args.pipeline)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
     t0 = time.perf_counter()
-    state, _, _ = eng.simulate(steps, state=state, collect=False)
-    dt = (time.perf_counter() - t0) / steps
+    state, _, _ = eng.simulate(args.steps, state=state, collect=False)
+    dt = (time.perf_counter() - t0) / args.steps
 
     # device-side decomposition (paper Fig. 6 analogue): time the force
     # pass (halo fwd + NB kernel + halo rev) vs the NB kernel alone
@@ -34,18 +59,36 @@ def main():
     t_force_pass = (time.perf_counter() - t0) / 10
 
     stats = eng.halo_stats()
-    print(json.dumps({
+    overlap = eng.overlap_stats()
+    record = {
         "devices": len(jax.devices()),
-        "mode": backend,
-        "n_atoms": n_atoms,
+        "mode": args.backend,
+        "pipeline": args.pipeline,
+        "halo_width": w,
+        "halo_pulses": args.halo_pulses,
+        "n_atoms": args.n_atoms,
         "dd": [int(mesh.shape[a]) for a in ("z", "y", "x")],
         "ms_per_step": dt * 1e3,
         "ms_force_pass": t_force_pass * 1e3,
-        "atom_steps_per_s": n_atoms / dt,
+        "atom_steps_per_s": args.n_atoms / dt,
         "halo_total_bytes": stats["total_bytes"],
         "halo_critical_bytes":
         stats[f"{eng.plan.backend.critical_path}_critical_bytes"],
-    }))
+        # per-step overlap model (the step-pipeline scaling story)
+        "overlapped_bytes": overlap["overlapped_bytes_per_step"],
+        "exposed_phases": overlap["exposed_phases_per_step"],
+        "exchanged_bytes": overlap["exchanged_bytes_per_step"],
+    }
+    print(json.dumps(record))
+    if args.out:
+        out_dir = Path(args.out)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        name = f"md__{args.backend}__{args.n_atoms}__{args.pipeline}"
+        if w != 1:
+            name += f"__w{w}"
+        if args.halo_pulses != 1:
+            name += f"__p{args.halo_pulses}"
+        (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
 
 
 if __name__ == "__main__":

@@ -104,24 +104,37 @@ def halo_table():
     Numbers come straight from ``HaloPlan.stats`` as recorded by
     ``python -m repro.launch.dryrun --halo`` — no local recomputation —
     with the compiled-HLO collective bytes as a cross-check column.
+    The latency columns are the alpha-beta model (per-message link
+    latency + bytes/bandwidth); exposed/ovl are the step-pipeline
+    overlap model (cells run with ``--pipeline double_buffer`` overlap
+    the reverse exchange).  Old-format records show '-'.
     """
-    print("\n| dd | backend | total B | chained B | chained/total | "
-          "dep frac | HLO coll B/dev |")
-    print("|---|---|---|---|---|---|---|")
+    print("\n| dd | backend | w | pulses | pipe | total B | chained B | "
+          "dep frac | ser t (us) | fused t (us) | exposed/step | ovl B | "
+          "HLO coll B/dev |")
+    print("|" + "---|" * 13)
     for p in sorted(DRY.glob("halo__*.json")):
         r = json.loads(p.read_text())
         if not r.get("ok"):
             print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | FAIL "
-                  f"{r.get('error', '')[:40]} |" + " |" * 4)
+                  f"{r.get('error', '')[:40]} |" + " |" * 10)
             continue
         st = r["plan_stats"]
         chained = (st["serialized_critical_bytes"]
                    if r["backend"] == "serialized"
                    else st["fused_critical_bytes"])
         coll = r["hlo_collective_bytes"] / max(r["devices"], 1)
-        print(f"| {r['dd']} | {r['backend']} | {st['total_bytes']} | "
-              f"{chained} | {chained / max(st['total_bytes'], 1):.3f} | "
-              f"{st['dependent_fraction']:.4f} | {coll:.3e} |")
+        lat = r.get("latency") or st.get("latency")
+        ovl = r.get("overlap") or st.get("overlap")
+        ser_us = f"{lat['serialized_time_s'] * 1e6:.2f}" if lat else "-"
+        fus_us = f"{lat['fused_time_s'] * 1e6:.2f}" if lat else "-"
+        exposed = ovl["exposed_phases_per_step"] if ovl else "-"
+        ovl_b = ovl["overlapped_bytes_per_step"] if ovl else "-"
+        print(f"| {r['dd']} | {r['backend']} | {r.get('width', 1)} | "
+              f"{r.get('pulses', 1)} | {r.get('pipeline', 'off')} | "
+              f"{st['total_bytes']} | {chained} | "
+              f"{st['dependent_fraction']:.4f} | {ser_us} | {fus_us} | "
+              f"{exposed} | {ovl_b} | {coll:.3e} |")
 
 
 if __name__ == "__main__":

@@ -65,3 +65,21 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return contextlib.nullcontext(mesh) if mesh is None else mesh
+
+
+def named_axes_in_scope():
+    """Mesh axis names bound by enclosing shard_maps at trace time.
+
+    Used by the ``"signal"`` halo backend: the Pallas *interpret-mode*
+    remote-DMA emulation only supports a single named axis in scope
+    (``dma_start_p`` discharge), so multi-axis callers fall back to the
+    ppermute oracle on CPU.  Best-effort across jax versions — returns
+    ``None`` when the axis env is unreadable (callers should then assume
+    the conservative multi-axis case).
+    """
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        return tuple(n for n in env.axis_sizes if n is not None)
+    except Exception:
+        return None

@@ -66,6 +66,13 @@ def _slice_low(x: jnp.ndarray, axis: int, width: int) -> jnp.ndarray:
     return x[tuple(idx)]
 
 
+def _slice_at(x: jnp.ndarray, axis: int, start: int, width: int
+              ) -> jnp.ndarray:
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(start, start + width)
+    return x[tuple(idx)]
+
+
 def _split_high(x: jnp.ndarray, axis: int, width: int):
     n = x.shape[axis] - width
     idx_body = [slice(None)] * x.ndim
@@ -75,9 +82,10 @@ def _split_high(x: jnp.ndarray, axis: int, width: int):
     return x[tuple(idx_body)], x[tuple(idx_halo)]
 
 
-def _add_low(x: jnp.ndarray, axis: int, width: int, update: jnp.ndarray):
+def _add_at(x: jnp.ndarray, axis: int, start: int, width: int,
+            update: jnp.ndarray):
     idx = [slice(None)] * x.ndim
-    idx[axis] = slice(0, width)
+    idx[axis] = slice(start, start + width)
     return x.at[tuple(idx)].add(update)
 
 
@@ -117,12 +125,14 @@ def exchange_fwd_serialized(local: jnp.ndarray, sched: PulseSchedule,
     shifter = _Shifter(sched.axis_names, axis_sizes, wrap_shift)
     ext = local
     for pulse in sched.serialized_order():
-        d, w = pulse.dim, pulse.width
+        d, w, off = pulse.dim, pulse.width, pulse.offset
         if w == 0:
             continue
         # The slab includes halo rows received by earlier pulses: this is the
-        # staged *forwarding* that forces strict pulse ordering.
-        slab = _slice_low(ext, d, w)
+        # staged *forwarding* that forces strict pulse ordering.  A later
+        # pulse of the same dim ships the next ``w`` rows of the dim's halo
+        # (slab start ``off``), so multi-pulse dims tile the same region.
+        slab = _slice_at(ext, d, off, w)
         recv = lax.ppermute(slab, sched.axis_names[d], _perm_fwd(axis_sizes[d]))
         recv = shifter(recv, d)
         ext = jnp.concatenate([ext, recv], axis=d)
@@ -209,13 +219,13 @@ def exchange_rev_serialized(ext: jnp.ndarray, sched: PulseSchedule,
     """
     out = ext
     for pulse in reversed(sched.serialized_order()):
-        d, w = pulse.dim, pulse.width
+        d, w, off = pulse.dim, pulse.width, pulse.offset
         if w == 0:
             continue
         body, halo = _split_high(out, d, w)
         recv = lax.ppermute(halo, sched.axis_names[d],
                             _perm_rev(axis_sizes[d]))
-        out = _add_low(body, d, w, recv)
+        out = _add_at(body, d, off, w, recv)
     return out
 
 
@@ -242,7 +252,7 @@ def exchange_rev_fused(ext: jnp.ndarray, sched: PulseSchedule,
                                 _perm_rev(axis_sizes[d]))
             recvs.append((tuple(k for k in region if k != d), d, w, recv))
         for dst_key, d, w, recv in recvs:
-            regions[dst_key] = _add_low(regions[dst_key], d, w, recv)
+            regions[dst_key] = _add_at(regions[dst_key], d, 0, w, recv)
     return regions[()]
 
 

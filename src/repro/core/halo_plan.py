@@ -68,7 +68,9 @@ class HaloSpec:
     paper's ``coordShift``); stored as a nested tuple so the spec stays
     hashable — ``HaloSpec.with_wrap_shift`` converts from arrays.
     ``dtype``/``feature_elems`` describe the payload layout and feed the
-    default byte accounting in :meth:`HaloPlan.stats`.
+    default byte accounting in :meth:`HaloPlan.stats`.  ``pulses`` is the
+    per-dim pulse count (GROMACS' two-pulse case splits a dim's halo across
+    two staged pulses); ``None`` means one pulse per dim.
     """
 
     axis_names: Tuple[str, ...]
@@ -78,6 +80,7 @@ class HaloSpec:
     dtype: str = "float32"
     feature_elems: int = 1
     interpret: bool = True   # pallas backend: interpreter mode (CPU/tests)
+    pulses: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
@@ -85,6 +88,9 @@ class HaloSpec:
                            tuple(int(w) for w in self.widths))
         if len(self.axis_names) != len(self.widths):
             raise ValueError("axis_names and widths must have equal length")
+        if self.pulses is not None:
+            object.__setattr__(self, "pulses",
+                               tuple(int(n) for n in self.pulses))
         if self.wrap_shift is not None:
             object.__setattr__(
                 self, "wrap_shift",
@@ -219,23 +225,22 @@ class PallasBackend(HaloBackend):
         cached = plan._index_maps.get(local_shape)
         if cached is not None:
             return cached
-        widths = plan.spec.widths
         fwd_maps, rev_maps = [], []
         shape = list(local_shape)
         for pulse in plan.sched.serialized_order():
-            d, w = pulse.dim, pulse.width
+            d, w, off = pulse.dim, pulse.width, pulse.offset
             if w:
-                fwd_maps.append(self._rows_along(shape, d, 0, w))
+                fwd_maps.append(self._rows_along(shape, d, off, off + w))
                 shape[d] += w
             else:
                 fwd_maps.append(None)
         for pulse in reversed(plan.sched.serialized_order()):
-            d, w = pulse.dim, pulse.width
+            d, w, off = pulse.dim, pulse.width, pulse.offset
             if w:
                 n = shape[d] - w
                 pack_idx = self._rows_along(shape, d, n, shape[d])
                 shape[d] = n
-                add_idx = self._rows_along(shape, d, 0, w)
+                add_idx = self._rows_along(shape, d, off, off + w)
                 rev_maps.append((pack_idx, add_idx))
             else:
                 rev_maps.append(None)
@@ -321,6 +326,13 @@ register_backend("pallas", PallasBackend)
 # byte / critical-path accounting (absorbs the old halo.exchange_stats)
 # --------------------------------------------------------------------------
 
+# default link model for the latency term in HaloPlan.stats: an
+# InfiniBand-class inter-node hop (~1.5 us) at NVLink/ICI-class payload
+# bandwidth; both are per-call configurable
+DEFAULT_LINK_LATENCY_S = 1.5e-6
+DEFAULT_BANDWIDTH_BPS = 5.0e10
+
+
 def compute_exchange_stats(sched: PulseSchedule,
                            local_shape: Sequence[int],
                            itemsize: int,
@@ -343,12 +355,13 @@ def compute_exchange_stats(sched: PulseSchedule,
 
     ser_pulse_bytes = []
     shape = list(local_shape)
-    for d in range(ndim):
+    for pulse in sched.serialized_order():
+        d = pulse.dim
         slab = 1
         for k in range(ndim):
-            slab *= widths[d] if k == d else shape[k]
+            slab *= pulse.width if k == d else shape[k]
         ser_pulse_bytes.append(slab * feature_elems * itemsize)
-        shape[d] += widths[d]
+        shape[d] += pulse.width
 
     fused_phases = []
     for phase in sched.forward_phases():
@@ -369,6 +382,72 @@ def compute_exchange_stats(sched: PulseSchedule,
         "fused_critical_bytes": sum(p["phase_critical_bytes"]
                                     for p in fused_phases),
         "dependent_fraction": sched.dependent_fraction(local_shape),
+    }
+
+
+def latency_model(stats: dict,
+                  link_latency_s: float = DEFAULT_LINK_LATENCY_S,
+                  bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS) -> dict:
+    """alpha-beta time model for one exchange direction (paper §6.2).
+
+    The serialized (CPU-initiated) design pays one link latency per
+    *message* — pulses are strictly chained, so each of its messages adds
+    ``alpha + bytes / BW`` to the critical path.  The fused GPU-initiated
+    design issues every message of a phase concurrently (put-with-signal,
+    no host round-trip), so a phase costs one ``alpha`` plus its chained
+    (max-transfer) bytes.  In the strong-scaling limit (bytes -> 0) the
+    ratio approaches ``n_messages / n_phases`` — the paper's small-domain
+    regime, where GROMACS' two-pulse dims make the serialized path pay
+    twice the latency per dim.
+    """
+    ser_msgs = [b for b in stats["serialized_pulse_bytes"] if b > 0]
+    phases = [p for p in stats["fused_phases"] if p["phase_bytes"] > 0]
+    serialized_s = sum(link_latency_s + b / bandwidth_Bps for b in ser_msgs)
+    fused_s = sum(link_latency_s + p["phase_critical_bytes"] / bandwidth_Bps
+                  for p in phases)
+    return {
+        "link_latency_s": link_latency_s,
+        "bandwidth_Bps": bandwidth_Bps,
+        "serialized_messages": len(ser_msgs),
+        "fused_phase_messages": [len(p["regions"]) for p in phases],
+        "serialized_time_s": serialized_s,
+        "fused_time_s": fused_s,
+        "fused_speedup": serialized_s / fused_s if fused_s else 1.0,
+    }
+
+
+def overlap_model(stats: dict, critical_path: str,
+                  pipeline: str = "off") -> dict:
+    """Per-step exposed-vs-overlapped communication under a step pipeline.
+
+    ``exposed_phases_per_step`` counts the communication stages left on a
+    step's critical path (per the backend's ``critical_path`` model: pulses
+    when serialized, phases when fused), for both exchange directions.
+    ``pipeline="double_buffer"`` overlaps the whole force-return exchange
+    of step ``N`` with step ``N+1``'s forward half, so only the forward
+    stages stay exposed and the reverse bytes count as overlapped (the
+    drain of the final step is amortized over the block).
+    """
+    if critical_path == "serialized":
+        stages = len([b for b in stats["serialized_pulse_bytes"] if b > 0])
+    else:
+        stages = len([p for p in stats["fused_phases"]
+                      if p["phase_bytes"] > 0])
+    if pipeline == "double_buffer":
+        exposed = stages                       # forward only
+        overlapped_bytes = stats["total_bytes"]  # the reverse exchange
+        overlapped_stages = stages
+    else:
+        exposed = 2 * stages                   # forward + reverse chained
+        overlapped_bytes = 0
+        overlapped_stages = 0
+    return {
+        "pipeline": pipeline,
+        "exposed_phases_per_step": exposed,
+        "overlapped_phases_per_step": overlapped_stages,
+        "overlapped_bytes_per_step": overlapped_bytes,
+        # both directions move the same regions
+        "exchanged_bytes_per_step": 2 * stats["total_bytes"],
     }
 
 
@@ -393,7 +472,8 @@ class HaloPlan:
         self.mesh = mesh
         self.backend = get_backend(spec.backend)
         self.sched: PulseSchedule = make_schedule(spec.axis_names,
-                                                  spec.widths)
+                                                  spec.widths,
+                                                  pulses_per_dim=spec.pulses)
         self.axis_sizes: Tuple[int, ...] = tuple(
             int(mesh.shape[a]) for a in spec.axis_names)
         # per-dim ppermute pairs, precomputed once (the plan's PulseData)
@@ -435,20 +515,39 @@ class HaloPlan:
 
     def stats(self, local_shape: Sequence[int],
               itemsize: Optional[int] = None,
-              feature_elems: Optional[int] = None) -> dict:
+              feature_elems: Optional[int] = None,
+              pipeline: str = "off",
+              link_latency_s: float = DEFAULT_LINK_LATENCY_S,
+              bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS) -> dict:
         """Canonical byte/critical-path stats for this plan's schedule.
 
         Defaults derive from the spec's dtype / feature layout; results are
-        cached per (shape, itemsize, feature_elems).
+        cached per argument tuple.  On top of the byte accounting this
+        reports a configurable alpha-beta ``latency`` model (per-message
+        link latency + bytes/bandwidth — see :func:`latency_model`) and the
+        step-``pipeline`` overlap model (``exposed_phases_per_step`` /
+        ``overlapped_bytes_per_step`` under ``"off"`` or
+        ``"double_buffer"`` — see :func:`overlap_model`).
         """
         if itemsize is None:
             itemsize = int(np.dtype(self.spec.dtype).itemsize)
         if feature_elems is None:
             feature_elems = self.spec.feature_elems
-        key = (tuple(local_shape), itemsize, feature_elems)
+        key = (tuple(local_shape), itemsize, feature_elems, pipeline,
+               link_latency_s, bandwidth_Bps)
         if key not in self._stats_cache:
-            self._stats_cache[key] = compute_exchange_stats(
-                self.sched, tuple(local_shape), itemsize, feature_elems)
+            stats = dict(compute_exchange_stats(
+                self.sched, tuple(local_shape), itemsize, feature_elems))
+            stats["latency"] = latency_model(stats, link_latency_s,
+                                             bandwidth_Bps)
+            overlap = overlap_model(stats, self.backend.critical_path,
+                                    pipeline)
+            stats["overlap"] = overlap
+            stats["exposed_phases_per_step"] = \
+                overlap["exposed_phases_per_step"]
+            stats["overlapped_bytes_per_step"] = \
+                overlap["overlapped_bytes_per_step"]
+            self._stats_cache[key] = stats
         return self._stats_cache[key]
 
     # -- device-local execution (inside an enclosing shard_map) ------------
@@ -520,3 +619,8 @@ class HaloPlan:
         return (f"HaloPlan(backend={self.spec.backend!r}, "
                 f"axes={self.spec.axis_names}, widths={self.spec.widths}, "
                 f"mesh={dict(self.mesh.shape)})")
+
+
+# the pipeline subsystem's put-with-signal backend registers itself on
+# import; the cycle is benign (it only references names defined above)
+import repro.core.pipeline.signal_backend  # noqa: E402,F401

@@ -7,11 +7,16 @@ The step structure mirrors the paper's Algorithm 2 (GPU-resident skeleton):
   3. force halo exchange + accumulate     (FusedCommUnpackF -> exchange_rev_*)
   4. integration                          (update stream     -> velocity Verlet)
 
-A whole ``nstlist`` block of steps is one jitted shard_map program
-(``lax.scan`` over steps): no host round-trip between steps, the TPU
-analogue of "launch tens to hundreds of time-steps before CPU-GPU sync"
-(paper §3).  Re-binning/migration — GROMACS' DD + neighbor-search work —
-runs between blocks as its own program, off the hot path (paper §5.4).
+A whole ``nstlist`` block of steps is one jitted shard_map program: no
+host round-trip between steps, the TPU analogue of "launch tens to
+hundreds of time-steps before CPU-GPU sync" (paper §3).  The scan body is
+delegated to :class:`repro.core.pipeline.StepPipeline`: ``pipeline="off"``
+runs the strictly serialized reference chain, ``"double_buffer"`` the
+software-pipelined schedule in which step N's force-return exchange is
+issued in the same program region as step N+1's coordinate sends (two-slot
+extended-force buffer, signal-ledger bookkeeping).  Re-binning/migration —
+GROMACS' DD + neighbor-search work — runs between blocks as its own
+program, off the hot path (paper §5.4).
 
 State layout per device (all static shapes):
   cell_f (cz, cy, cx, K, 7)  [x, y, z, charge, vx, vy, vz]
@@ -39,6 +44,7 @@ from repro.core.md.domain import AXES, domain_index, rebin
 from repro.core.md.forces import compute_forces
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
+from repro.core.pipeline import PIPELINE_MODES, StepFns, StepPipeline
 
 
 class MDEngine:
@@ -47,18 +53,29 @@ class MDEngine:
     ``spec`` selects the halo backend and widths; the engine fills in the
     physics the spec leaves open (periodic wrap shifts from the box) and
     builds one :class:`HaloPlan` reused by every step/rebin/force program.
+    ``pipeline`` selects the multi-step schedule (``"off"`` or
+    ``"double_buffer"``, see :class:`repro.core.pipeline.StepPipeline`);
+    both produce bitwise-identical trajectories.
     """
 
     def __init__(self, system: MDSystem, mesh: Mesh,
                  spec: HaloSpec | None = None,
-                 r_list_factor: float = 1.08, mig_frac: float = 0.125):
+                 r_list_factor: float = 1.08, mig_frac: float = 0.125,
+                 pipeline: str = "off"):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
             raise ValueError(f"MD halo spec must decompose over {AXES}, "
                              f"got {spec.axis_names}")
+        if pipeline not in PIPELINE_MODES:
+            raise ValueError(f"unknown pipeline mode {pipeline!r}; "
+                             f"available: {PIPELINE_MODES}")
+        if min(spec.widths) < 1:
+            raise ValueError("MD halo widths must be >= 1 (the NB stencil "
+                             "consumes one halo cell layer)")
         self.system = system
         self.mesh = mesh
+        self.pipeline_mode = pipeline
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
         self.layout = choose_layout(system.box, mesh_shape, r_list,
@@ -93,6 +110,29 @@ class MDEngine:
         """Plan-reported bytes/critical-path stats at this DD layout."""
         return self.plan.stats(self.layout.cells_per_domain)
 
+    def overlap_stats(self) -> dict:
+        """Per-step overlap model at this engine's pipeline mode."""
+        return self.plan.stats(self.layout.cells_per_domain,
+                               pipeline=self.pipeline_mode)["overlap"]
+
+    def _trim_ext(self, ext):
+        """First halo cell layer of an extended block (the NB stencil
+        reaches exactly one cell); identity at the default widths."""
+        if max(self.spec.widths) == 1:
+            return ext
+        n = self.layout.cells_per_domain
+        return ext[tuple(slice(0, n[d] + 1) for d in range(3))]
+
+    def _pad_force(self, F_trim, ext_shape):
+        """Zero-pad trimmed forces back to the full extended block (layers
+        beyond the first contribute nothing, the reverse path still
+        returns them so widths > 1 stay trajectory-neutral)."""
+        if max(self.spec.widths) == 1:
+            return F_trim
+        n = self.layout.cells_per_domain
+        F = jnp.zeros(tuple(ext_shape[:3]) + F_trim.shape[3:], F_trim.dtype)
+        return F.at[tuple(slice(0, n[d] + 1) for d in range(3))].set(F_trim)
+
     def _force_pass(self, cell_f, cell_i):
         """Coordinate halo -> forces -> force halo (paper Alg. 3/6).
 
@@ -102,43 +142,75 @@ class MDEngine:
         """
         ext_f = self.plan.fwd_local(cell_f[..., :4])
         ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
-        F_ext, pe = compute_forces(ext_f, ext_i, self.layout,
-                                   self.system.params.ff)
-        f_local = self.plan.rev_local(F_ext)
+        F_trim, pe = compute_forces(self._trim_ext(ext_f),
+                                    self._trim_ext(ext_i), self.layout,
+                                    self.system.params.ff)
+        f_local = self.plan.rev_local(self._pad_force(F_trim, ext_f.shape))
         return f_local, lax.psum(pe, AXES)
 
-    # ---- programs ----------------------------------------------------------
+    # ---- step physics, split at the halo seams (StepFns) -------------------
 
-    def _build_programs(self):
+    def _make_step_fns(self) -> StepFns:
+        """The per-step physics as pipeline callbacks.
+
+        ``ctx`` carries the block-constant arrays: ``cell_i`` (atom
+        ids/types never change within a block — migration runs between
+        blocks) and its pre-exchanged extension ``ext_i``, hoisted out of
+        the step loop.
+        """
         params = self.system.params
         mass, dt = params.mass, params.dt
-        layout, mig_cap = self.layout, self.mig_cap
+        layout, ff = self.layout, params.ff
 
-        def step(carry, _):
-            cell_f, cell_i, force = carry
-            valid = cell_i[..., 0] >= 0
+        def begin(cell_f, force, ctx):
+            valid = ctx["cell_i"][..., 0] >= 0
             vmask = valid[..., None]
             # velocity Verlet: kick-drift
             vel_half = cell_f[..., 4:7] + jnp.where(
                 vmask, force * (dt / (2 * mass)), 0.0)
             pos_new = cell_f[..., :3] + jnp.where(vmask, vel_half * dt, 0.0)
             cell_f = cell_f.at[..., :3].set(pos_new)
-            # forces at t+dt (halo fwd, NB kernel, halo rev)
-            f_new, pe = self._force_pass(cell_f, cell_i)
+            return cell_f, vel_half, cell_f[..., :4]
+
+        def force(ext_f, ctx):
+            F_trim, pe = compute_forces(self._trim_ext(ext_f),
+                                        ctx["ext_i_trim"], layout, ff)
+            return self._pad_force(F_trim, ext_f.shape), \
+                {"pe": lax.psum(pe, AXES)}
+
+        def finish(cell_f, vel_half, f_new, ctx):
+            valid = ctx["cell_i"][..., 0] >= 0
+            vmask = valid[..., None]
             f_new = jnp.where(vmask, f_new, 0.0)
-            # kick
-            vel_new = vel_half + f_new * (dt / (2 * mass))
+            # kick; the where between the product and the sum (same form
+            # as the kick-drift in ``begin``) keeps the rounding fixed —
+            # a bare mul+add can FMA-contract differently depending on how
+            # the surrounding halo-backend graph fuses
+            vel_new = vel_half + jnp.where(vmask,
+                                           f_new * (dt / (2 * mass)), 0.0)
             cell_f = cell_f.at[..., 4:7].set(jnp.where(vmask, vel_new, 0.0))
             ke = integrate.kinetic_energy(vel_new, valid, mass)
             mom = integrate.momentum(jnp.where(vmask, vel_new, 0.0),
                                      valid, mass)
             noop()  # schedule-optimization hook (see schedule_opt)
-            return (cell_f, cell_i, f_new), {"pe": pe, "ke": ke, "mom": mom}
+            return cell_f, f_new, {"ke": ke, "mom": mom}
+
+        return StepFns(begin=begin, force=force, finish=finish)
+
+    # ---- programs ----------------------------------------------------------
+
+    def _build_programs(self):
+        layout, mig_cap = self.layout, self.mig_cap
+        self.pipeline = StepPipeline.build(self.plan, self._make_step_fns(),
+                                           mode=self.pipeline_mode)
 
         def block(cell_f, cell_i, force, n_steps):
-            (cell_f, cell_i, force), metrics = lax.scan(
-                step, (cell_f, cell_i, force), None, length=n_steps)
-            return cell_f, cell_i, force, metrics
+            ctx = {"cell_i": cell_i,
+                   "ext_i_trim": self._trim_ext(
+                       self.plan.fwd_local(cell_i, wrap_shift=None))}
+            cell_f, f_last, metrics, _led = self.pipeline.run_local(
+                cell_f, force, n_steps, ctx)
+            return cell_f, cell_i, f_last, metrics
 
         def do_rebin(cell_f, cell_i):
             new_f, new_i, diag = rebin(cell_f, cell_i, layout, mig_cap)

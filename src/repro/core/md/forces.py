@@ -20,6 +20,7 @@ from typing import List, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core.md.cells import CellLayout
 from repro.core.md.system import ForceField
@@ -110,9 +111,15 @@ def compute_forces(ext_f, ext_i, layout: CellLayout, ff: ForceField):
         sig = sig_t[typ_a[..., :, None], typ_b[..., None, :]]
         fac, pe = _pair_terms(dx, r2, q_a[..., :, None], q_b[..., None, :],
                               eps, sig, ff, mask)
-        fvec = fac[..., None] * dx
-        fa = jnp.sum(fvec, axis=-2)          # force on A atoms
-        fb = -jnp.sum(fvec, axis=-3)         # Newton's third law
+        # barriers pin the K-wide pair reductions to standalone, canonical
+        # compilations: their partial-sum order must not depend on how the
+        # surrounding program (halo backend, step-pipeline schedule) fuses,
+        # or different schedules would drift apart at the ulp level
+        fvec = lax.optimization_barrier(fac[..., None] * dx)
+        fa = lax.optimization_barrier(
+            jnp.sum(fvec, axis=-2))          # force on A atoms
+        fb = lax.optimization_barrier(
+            -jnp.sum(fvec, axis=-3))         # Newton's third law
         cz, cy, cx = shape
         F_ext = F_ext.at[a[0]:a[0] + cz, a[1]:a[1] + cy,
                          a[2]:a[2] + cx].add(fa)

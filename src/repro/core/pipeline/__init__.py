@@ -1,0 +1,32 @@
+"""GPU-resident multi-step overlap subsystem.
+
+The layer between :class:`~repro.core.halo_plan.HaloPlan` (construct-once
+exchange plans) and the MD engine's step programs:
+
+* :class:`SignalLedger` — functional model of NVSHMEM put-with-signal
+  bookkeeping (release/acquire counters per buffer slot and pulse);
+* the ``"signal"`` halo backend — device-initiated pack+put pulses driving
+  :func:`repro.kernels.halo_pack.put_signal` / ``fused_pulses`` end to end
+  (registered into the :mod:`repro.core.halo_plan` backend registry on
+  import);
+* :class:`StepPipeline` — double-buffered, software-pipelined multi-step
+  ``lax.scan`` programs in which step ``N``'s force-return exchange
+  overlaps step ``N+1``'s coordinate sends.
+"""
+from repro.core.pipeline.ledger import KINDS, LedgerState, SignalLedger
+from repro.core.pipeline.signal_backend import SignalBackend
+from repro.core.pipeline.step_pipeline import (
+    PIPELINE_MODES,
+    StepFns,
+    StepPipeline,
+)
+
+__all__ = [
+    "KINDS",
+    "LedgerState",
+    "PIPELINE_MODES",
+    "SignalBackend",
+    "SignalLedger",
+    "StepFns",
+    "StepPipeline",
+]

@@ -1,0 +1,213 @@
+"""StepPipeline: persistent, double-buffered multi-step halo programs.
+
+The paper's headline gains come from *fusing communication into the step
+program*: GPU-initiated sends overlap force compute so hardware hides the
+halo latency (Alg. 5/6), and consecutive steps share a persistent,
+pre-planned exchange.  :class:`StepPipeline` is that seam between a
+:class:`~repro.core.halo_plan.HaloPlan` and an engine's physics:
+
+* ``pipeline="off"`` — the strictly serialized reference: each ``lax.scan``
+  iteration runs ``begin -> fwd halo -> forces -> rev halo -> finish``,
+  with a scan-iteration barrier between the force return of step ``N``
+  and the coordinate sends of step ``N+1`` (the CPU-round-trip analogue).
+
+* ``pipeline="double_buffer"`` — the software-pipelined schedule: the step
+  program is skewed so one scan iteration issues step ``N``'s force-return
+  (reverse) exchange and step ``N+1``'s coordinate (forward) exchange in
+  the SAME fused program region.  Extended force buffers live in a
+  ``depth``-slot ring (two slots = the paper's double-buffered halos): the
+  reverse path drains slot ``N % depth`` while the force kernel fills slot
+  ``(N+1) % depth``, so XLA's async collectives can overlap the two
+  transfers — puts of one step never wait on (or clobber) the buffer of
+  the other.  A :class:`~repro.core.pipeline.ledger.SignalLedger` threads
+  put-with-signal bookkeeping through the scan carry.
+
+Both modes compute bit-identical trajectories: pipelining regroups the
+exact same per-step operations across scan iterations (prologue runs step
+0's forward half, the epilogue drains the last force return).  Exchange
+boundaries are ``optimization_barrier``s — the XLA realization of the
+signal acquire: consumers cannot be fused or hoisted across the wait, so
+the physics islands compile identically for every backend and the
+trajectory stays bitwise-stable across backends and pipeline modes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.halo_plan import HaloPlan
+from repro.core.pipeline.ledger import LedgerState, SignalLedger
+
+PIPELINE_MODES = ("off", "double_buffer")
+
+# fns signatures (all run device-local, inside the engine's shard_map):
+#   begin(state, f, ctx)   -> (state, aux, payload)   kick-drift; payload is
+#                                                     the array to exchange
+#   force(ext, ctx)        -> (F_ext, metrics)        forces on the extended
+#                                                     block (not returned yet)
+#   finish(state, aux, f, ctx) -> (state, f_carry, metrics)
+#                                                     final kick; f_carry
+#                                                     seeds the next begin
+Metrics = Dict[str, jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class StepFns:
+    """The engine-supplied physics of one step, split at the halo seams.
+
+    Metric keys must be unique across ``force`` and ``finish`` (the
+    pipeline merges them into one per-step dict).
+    """
+
+    begin: Callable[[Any, jnp.ndarray, Any], Tuple[Any, Any, jnp.ndarray]]
+    force: Callable[[jnp.ndarray, Any], Tuple[jnp.ndarray, Metrics]]
+    finish: Callable[[Any, Any, jnp.ndarray, Any],
+                     Tuple[Any, jnp.ndarray, Metrics]]
+
+
+class StepPipeline:
+    """Construct-once multi-step program over one :class:`HaloPlan`."""
+
+    def __init__(self, plan: HaloPlan, fns: StepFns,
+                 mode: str = "double_buffer", depth: int = 2):
+        if mode not in PIPELINE_MODES:
+            raise ValueError(f"unknown pipeline mode {mode!r}; "
+                             f"available: {PIPELINE_MODES}")
+        if depth < 2 and mode == "double_buffer":
+            raise ValueError("double_buffer needs depth >= 2")
+        self.plan = plan
+        self.fns = fns
+        self.mode = mode
+        self.depth = depth if mode == "double_buffer" else 1
+        self.ledger = SignalLedger(depth=self.depth,
+                                   n_pulses=max(1, plan.sched.total_pulses))
+
+    @classmethod
+    def build(cls, plan: HaloPlan, fns: StepFns, *,
+              mode: str = "double_buffer", depth: int = 2) -> "StepPipeline":
+        return cls(plan, fns, mode=mode, depth=depth)
+
+    # -- execution (device-local: call inside the engine's shard_map) ------
+
+    def run_local(self, state, f0: jnp.ndarray, n_steps: int, ctx=None
+                  ) -> Tuple[Any, jnp.ndarray, Metrics, LedgerState]:
+        """Run ``n_steps`` (static) steps; returns the final state, the
+        last step's returned forces, per-step stacked metrics, and the
+        final signal-ledger state."""
+        if n_steps < 1:
+            raise ValueError("n_steps must be >= 1")
+        if self.mode == "off":
+            return self._run_serial(state, f0, n_steps, ctx)
+        return self._run_pipelined(state, f0, n_steps, ctx)
+
+    def _fwd(self, payload):
+        """Coordinate exchange between its signal release and acquire.
+
+        The barriers are the XLA realization of put-with-signal ordering:
+        the producer's release pins the payload before the puts, the
+        consumer's acquire pins the received halo after them, so no op can
+        be fused or hoisted across either side of the exchange and the
+        physics islands compile identically for every backend.
+        """
+        payload = lax.optimization_barrier(payload)
+        return lax.optimization_barrier(self.plan.fwd_local(payload))
+
+    def _rev(self, F_ext):
+        """Force-return exchange between its signal release and acquire."""
+        F_ext = lax.optimization_barrier(F_ext)
+        return lax.optimization_barrier(self.plan.rev_local(F_ext))
+
+    def _run_serial(self, state, f0, n_steps, ctx):
+        fns, ledger = self.fns, self.ledger
+
+        def step(carry, _):
+            state, f, led = carry
+            state, aux, payload = fns.begin(state, f, ctx)
+            led = ledger.release(led, "fwd", 0)
+            ext = self._fwd(payload)
+            led = ledger.acquire(led, "fwd", 0)
+            F_ext, m_force = fns.force(ext, ctx)
+            led = ledger.release(led, "rev", 0)
+            f_new = self._rev(F_ext)
+            led = ledger.acquire(led, "rev", 0)
+            state, f_new, m_fin = fns.finish(state, aux, f_new, ctx)
+            # pin the step boundary (the per-step signal rotation): the
+            # carried state is materialized identically in every schedule,
+            # keeping trajectories bitwise-stable across pipeline modes
+            state, f_new = lax.optimization_barrier((state, f_new))
+            return (state, f_new, led), {**m_force, **m_fin}
+
+        (state, f, led), metrics = lax.scan(
+            step, (state, f0, ledger.init()), None, length=n_steps)
+        return state, f, metrics, led
+
+    def _run_pipelined(self, state, f0, n_steps, ctx):
+        fns, ledger, depth = self.fns, self.ledger, self.depth
+
+        # prologue: step 0's forward half fills buffer slot 0
+        state, aux, payload = fns.begin(state, f0, ctx)
+        led = ledger.release(ledger.init(), "fwd", 0)
+        ext = self._fwd(payload)
+        led = ledger.acquire(led, "fwd", 0)
+        F0, m_force0 = fns.force(ext, ctx)
+        slots = jnp.zeros((depth,) + F0.shape, F0.dtype)
+        slots = lax.dynamic_update_index_in_dim(slots, F0, 0, 0)
+
+        def pipelined_step(carry, k):
+            state, slots, aux, led = carry
+            prev, cur = (k - 1) % depth, k % depth
+            # step k-1's force return is issued FIRST, so its transfers sit
+            # in the same program region as step k's forward sends below —
+            # no scan-iteration barrier between them, and they drain/fill
+            # different buffer slots
+            F_prev = lax.dynamic_index_in_dim(slots, prev, 0,
+                                              keepdims=False)
+            led = ledger.release(led, "rev", prev)
+            f_prev = self._rev(F_prev)
+            led = ledger.acquire(led, "rev", prev)
+            state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
+            # step k's forward half overlaps the drain above
+            state, aux, payload = fns.begin(state, f_carry, ctx)
+            led = ledger.release(led, "fwd", cur)
+            ext = self._fwd(payload)
+            led = ledger.acquire(led, "fwd", cur)
+            F_ext, m_force = fns.force(ext, ctx)
+            slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
+            # pin the step boundary (see _run_serial)
+            state, slots = lax.optimization_barrier((state, slots))
+            return (state, slots, aux, led), \
+                {"force": m_force, "finish": m_fin}
+
+        (state, slots, aux, led), mids = lax.scan(
+            pipelined_step, (state, slots, aux, led),
+            jnp.arange(1, n_steps))
+
+        # epilogue: drain the last step's force return
+        last = (n_steps - 1) % depth
+        F_last = lax.dynamic_index_in_dim(slots, last, 0, keepdims=False)
+        led = ledger.release(led, "rev", last)
+        f_last = self._rev(F_last)
+        led = ledger.acquire(led, "rev", last)
+        state, f_carry, m_fin_last = fns.finish(state, aux, f_last, ctx)
+
+        # re-align per-step metrics: iteration k emitted step k's force
+        # metrics but step k-1's finish metrics
+        metrics: Metrics = {}
+        for key, v in m_force0.items():
+            metrics[key] = jnp.concatenate([v[None], mids["force"][key]])
+        for key, v in m_fin_last.items():
+            metrics[key] = jnp.concatenate([mids["finish"][key], v[None]])
+        return state, f_carry, metrics, led
+
+    # -- introspection -----------------------------------------------------
+
+    def stats(self, local_shape, **kw) -> dict:
+        """Plan stats at this pipeline mode (overlap + latency model)."""
+        return self.plan.stats(local_shape, pipeline=self.mode, **kw)
+
+    def __repr__(self):
+        return (f"StepPipeline(mode={self.mode!r}, depth={self.depth}, "
+                f"plan={self.plan!r})")

@@ -34,20 +34,32 @@ class Pulse:
     which have no meaning under XLA): the send/recv ranks are implied by a
     ``ppermute`` along ``axis_name``; ``width`` is the halo width in grid
     elements (or the per-pulse atom capacity for the MD index-map path).
+
+    With more than one pulse per dimension (GROMACS' two-pulse case) the
+    dimension's halo of total width ``W`` is split across its pulses:
+    ``offset`` is this pulse's start row within the dim's halo, so pulse
+    ``k`` of dim ``d`` ships slab rows ``[offset, offset + width)`` of the
+    sender's (extended) block along ``d``.
     """
 
     index: int            # position in the global pulse order
     dim: int              # spatial dimension this pulse sweeps (0 = Z-like)
     axis_name: str        # mesh axis name used for the ppermute
-    width: int            # halo width in elements along `dim`
+    width: int            # this pulse's halo width in elements along `dim`
+    offset: int = 0       # start row within the dim's total halo
+    dim_pulse: int = 0    # position among this dim's pulses
+    n_dim_pulses: int = 1  # total pulses along this dim
 
     @property
     def first_dependent_pulse(self) -> Optional[int]:
         """Index of the earliest pulse whose data this pulse forwards.
 
-        With one pulse per dimension this is simply the previous pulse in
-        global order (paper §5.1: firstDependentPulse(z0)=none;
-        firstDependentPulse(y0)=z0; firstDependentPulse(x0)=y0).
+        In the single-pulse-per-dim case this is simply the previous pulse
+        in global order (paper §5.1: firstDependentPulse(z0)=none;
+        firstDependentPulse(y0)=z0; firstDependentPulse(x0)=y0).  Later
+        pulses of the same dim forward data only when their slab reaches
+        into rows received by the dim's earlier pulses, which also resolves
+        to the previous pulse in global order.
         """
         return None if self.index == 0 else self.index - 1
 
@@ -58,7 +70,17 @@ class PulseSchedule:
 
     pulses: Tuple[Pulse, ...]
     axis_names: Tuple[str, ...]   # one mesh axis per decomposition dim
-    widths: Tuple[int, ...]       # halo width per decomposition dim
+    widths: Tuple[int, ...]       # TOTAL halo width per decomposition dim
+    pulses_per_dim: Tuple[int, ...] = ()   # () = one pulse per dim
+
+    def __post_init__(self):
+        if not self.pulses_per_dim:
+            object.__setattr__(self, "pulses_per_dim",
+                               (1,) * len(self.axis_names))
+
+    def dim_pulses(self, d: int) -> Tuple[Pulse, ...]:
+        """This dim's pulses in within-dim (offset-ascending) order."""
+        return tuple(p for p in self.pulses if p.dim == d)
 
     @property
     def ndim(self) -> int:
@@ -128,21 +150,52 @@ class PulseSchedule:
         return dependent / total if total else 0.0
 
 
-def make_schedule(axis_names: Sequence[str], widths: Sequence[int]) -> PulseSchedule:
-    """Build the global pulse order [Z.., Y.., X..] with one pulse per dim.
+def split_width(width: int, n_pulses: int) -> Tuple[int, ...]:
+    """Balanced per-pulse widths for one dim (GROMACS-style, wide first)."""
+    base, rem = divmod(width, n_pulses)
+    return tuple(base + (1 if k < rem else 0) for k in range(n_pulses))
 
-    GROMACS supports up to two pulses per dimension, but (paper §2.2) in
-    GPU-resident runs with DLB disabled and heterogeneous-scale domains the
-    pulse count per dimension is "almost always one"; we implement the
-    single-pulse schedule and treat ``width`` as the (static) halo extent.
+
+def make_schedule(axis_names: Sequence[str], widths: Sequence[int],
+                  pulses_per_dim: Optional[Sequence[int]] = None
+                  ) -> PulseSchedule:
+    """Build the global pulse order [Z.., Y.., X..].
+
+    GROMACS supports up to two pulses per dimension; (paper §2.2) in
+    GPU-resident runs with DLB disabled the pulse count per dimension is
+    "almost always one", which is the default here.  ``pulses_per_dim``
+    opts into the multi-pulse case: dim ``d``'s total halo ``widths[d]`` is
+    split into ``pulses_per_dim[d]`` balanced slabs, each shipped by its
+    own pulse at its own ``offset`` (within-dim pulses appear consecutively
+    in the global order, so staged forwarding semantics are preserved).
     """
     if len(axis_names) != len(widths):
         raise ValueError("axis_names and widths must have equal length")
     if not axis_names:
         raise ValueError("need at least one decomposition dimension")
-    pulses = tuple(
-        Pulse(index=i, dim=i, axis_name=name, width=int(w))
-        for i, (name, w) in enumerate(zip(axis_names, widths))
-    )
-    return PulseSchedule(pulses=pulses, axis_names=tuple(axis_names),
-                         widths=tuple(int(w) for w in widths))
+    widths = tuple(int(w) for w in widths)
+    if pulses_per_dim is None:
+        pulses_per_dim = (1,) * len(axis_names)
+    pulses_per_dim = tuple(int(n) for n in pulses_per_dim)
+    if len(pulses_per_dim) != len(axis_names):
+        raise ValueError("pulses_per_dim and axis_names must have equal "
+                         "length")
+    pulses = []
+    for d, (name, w, np_) in enumerate(zip(axis_names, widths,
+                                           pulses_per_dim)):
+        if np_ < 1:
+            raise ValueError(f"dim {d}: need at least one pulse, got {np_}")
+        if w == 0:
+            np_ = 1           # width-0 dims degrade to one no-op pulse
+        elif np_ > w:
+            raise ValueError(f"dim {d}: {np_} pulses cannot split a "
+                             f"width-{w} halo")
+        off = 0
+        for k, wk in enumerate(split_width(w, np_)):
+            pulses.append(Pulse(index=len(pulses), dim=d, axis_name=name,
+                                width=wk, offset=off, dim_pulse=k,
+                                n_dim_pulses=np_))
+            off += wk
+    return PulseSchedule(pulses=tuple(pulses),
+                         axis_names=tuple(axis_names), widths=widths,
+                         pulses_per_dim=pulses_per_dim)

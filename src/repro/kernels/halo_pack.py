@@ -118,17 +118,20 @@ def unpack_add(dst: jax.Array, index_map: jax.Array, rows: jax.Array,
 # --------------------------------------------------------------------------
 
 def _put_signal_kernel(idx_ref, src_ref, out_ref, scratch, send_sem,
-                       recv_sem, *, chunk: int, axis: str, ring: int):
+                       recv_sem, *, chunk: int, axis: str, ring: int,
+                       shift: int):
     """One pulse of a ring halo exchange, chunk-pipelined.
 
     Packs chunk c into VMEM scratch, then immediately starts the remote
     copy into the receiver's out buffer (fused pack+comm+notify); the
-    final wait drains the receives (the signal acquire).
+    final wait drains the receives (the signal acquire).  ``shift`` is the
+    ring offset of the put target: -1 for the coordinate (forward) halo
+    (send to -1, receive from +1), +1 for the force-return (reverse) path.
     """
     c = pl.program_id(0)
     n_chunks = pl.num_programs(0)
     my = jax.lax.axis_index(axis)
-    neighbor = jax.lax.rem(my + ring - 1, ring)   # send to -1 (recv from +1)
+    neighbor = jax.lax.rem(my + ring + shift, ring)
 
     idx = idx_ref[pl.ds(c * chunk, chunk)]
     valid = idx >= 0
@@ -145,10 +148,13 @@ def _put_signal_kernel(idx_ref, src_ref, out_ref, scratch, send_sem,
 
 
 def put_signal(src: jax.Array, index_map: jax.Array, axis: str, ring: int,
-               chunk: int = 128, interpret: bool = True) -> jax.Array:
+               chunk: int = 128, interpret: bool = True,
+               shift: int = -1) -> jax.Array:
     """Device-initiated halo put: returns this device's RECEIVED buffer.
 
     Must run inside shard_map over ``axis`` (ring size ``ring``).
+    ``shift=-1`` puts to the -1 neighbor (coordinate halo, receive from
+    +1); ``shift=+1`` puts to the +1 neighbor (force-return path).
     """
     M = index_map.shape[0]
     F = src.shape[-1]
@@ -157,7 +163,7 @@ def put_signal(src: jax.Array, index_map: jax.Array, axis: str, ring: int,
         chunk -= 1
     return pl.pallas_call(
         functools.partial(_put_signal_kernel, chunk=chunk, axis=axis,
-                          ring=ring),
+                          ring=ring, shift=shift),
         grid=(M // chunk,),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],

@@ -195,41 +195,61 @@ def cell_path(arch, shape, mesh_name, tag=""):
 # ---- halo-plan cells (paper Fig. 5 analogue, compiled) -----------------------
 
 HALO_DD = {"1d": (4, 1, 1), "2d": (4, 4, 1), "3d": (4, 4, 4)}
-HALO_BACKENDS = ("serialized", "fused")
+HALO_BACKENDS = ("serialized", "fused", "pallas", "signal")
+
+
+def halo_cell_name(dd_name: str, backend: str, width: int = 1,
+                   pulses: int = 1, pipeline: str = "off") -> str:
+    name = f"halo__{dd_name}__{backend}"
+    if width != 1:
+        name += f"__w{width}"
+    if pulses != 1:
+        name += f"__p{pulses}"
+    if pipeline != "off":
+        name += f"__{pipeline}"
+    return name
 
 
 def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
+                  width: int = 1, pulses: int = 1, pipeline: str = "off",
                   verbose: bool = True):
     """Lower + compile one HaloPlan.fwd cell and record plan + HLO stats.
 
     The plan-reported byte/critical-path numbers are the canonical ones
     (results/make_tables.py reads them); the compiled-HLO collective bytes
-    cross-check that XLA moves what the plan says it moves.
+    cross-check that XLA moves what the plan says it moves.  ``width`` /
+    ``pulses`` select the width>1 multi-pulse schedules; ``pipeline``
+    selects the per-step overlap model recorded under ``overlap``.
     """
     from repro.core.halo_plan import HaloPlan, HaloSpec
     from repro.launch.mesh import make_mesh
 
     t0 = time.time()
     record = {"kind": "halo", "dd": dd_name, "backend": backend,
-              "local": list(local), "ok": False}
+              "local": list(local), "width": width, "pulses": pulses,
+              "pipeline": pipeline, "ok": False}
     try:
         dd = HALO_DD[dd_name]
         mesh = make_mesh(dd, ("z", "y", "x"))
         # width 0 on non-decomposed dims: a 1D DD exchanges z-slabs only
-        widths = tuple(1 if n > 1 else 0 for n in dd)
+        widths = tuple(width if n > 1 else 0 for n in dd)
+        pulses_per_dim = tuple(pulses if w else 1 for w in widths)
         spec = HaloSpec(axis_names=("z", "y", "x"), widths=widths,
                         backend=backend, dtype="float32",
-                        feature_elems=feat)
+                        feature_elems=feat, pulses=pulses_per_dim)
         plan = HaloPlan.build(spec, mesh)
         gshape = tuple(n * d for n, d in zip(local, dd)) + (feat,)
         arg = jax.ShapeDtypeStruct(gshape, np.float32)
         lowered = jax.jit(lambda a: plan.fwd(a)).lower(arg)
         compiled = lowered.compile()
         parsed = hlo_analysis.analyze(compiled.as_text())
+        stats = plan.stats(local, pipeline=pipeline)
         record.update({
             "ok": True,
             "devices": int(np.prod(dd)),
-            "plan_stats": plan.stats(local),
+            # latency + overlap models live inside plan_stats (single
+            # source of truth; make_tables reads them from there)
+            "plan_stats": stats,
             "hlo_collective_bytes": parsed["collective_bytes"],
             "hlo_bytes": parsed["bytes"],
         })
@@ -237,7 +257,8 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
             st = record["plan_stats"]
             print(f"  plan: total={st['total_bytes']} "
                   f"ser_crit={st['serialized_critical_bytes']} "
-                  f"fused_crit={st['fused_critical_bytes']}")
+                  f"fused_crit={st['fused_critical_bytes']} "
+                  f"exposed/step={st['exposed_phases_per_step']}")
             print(f"  hlo collective bytes: {parsed['collective_bytes']:.3e}")
     except Exception as e:  # noqa: BLE001
         record["error"] = f"{type(e).__name__}: {e}"
@@ -250,16 +271,20 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
     return record
 
 
-def run_halo_cells(force: bool = False):
+def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
+                   pipeline: str = "off"):
     RESULTS.mkdir(parents=True, exist_ok=True)
     for dd_name in HALO_DD:
         for backend in HALO_BACKENDS:
-            path = RESULTS / f"halo__{dd_name}__{backend}.json"
+            name = halo_cell_name(dd_name, backend, width, pulses, pipeline)
+            path = RESULTS / f"{name}.json"
             if path.exists() and not force:
                 print(f"[skip] {path.name} exists")
                 continue
-            print(f"[halo] {dd_name} x {backend}", flush=True)
-            rec = run_halo_cell(dd_name, backend)
+            print(f"[halo] {dd_name} x {backend} w={width} p={pulses} "
+                  f"pipeline={pipeline}", flush=True)
+            rec = run_halo_cell(dd_name, backend, width=width,
+                                pulses=pulses, pipeline=pipeline)
             path.write_text(json.dumps(rec, indent=1))
             print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
                   f"({rec['wall_s']}s)", flush=True)
@@ -277,6 +302,14 @@ def main():
     ap.add_argument("--summarize", action="store_true")
     ap.add_argument("--halo", action="store_true",
                     help="compile HaloPlan cells (results/dryrun/halo__*)")
+    ap.add_argument("--halo-width", type=int, default=1,
+                    help="halo width per decomposed dim for --halo cells")
+    ap.add_argument("--halo-pulses", type=int, default=1,
+                    help="pulses per dim (GROMACS two-pulse case: 2)")
+    ap.add_argument("--pipeline", default="off",
+                    choices=["off", "double_buffer"],
+                    help="step-pipeline overlap model recorded with "
+                         "--halo cells")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--pod-compress", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
@@ -289,7 +322,8 @@ def main():
         summarize()
         return
     if args.halo:
-        run_halo_cells(force=args.force)
+        run_halo_cells(force=args.force, width=args.halo_width,
+                       pulses=args.halo_pulses, pipeline=args.pipeline)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -58,6 +58,33 @@ def test_pulse_dependency_chain(case):
         assert p.first_dependent_pulse == p.index - 1
 
 
+@given(schedule_case(), st.integers(1, 3))
+@settings(max_examples=60, deadline=None)
+def test_multi_pulse_schedule_tiles_and_conserves_bytes(case, np_max):
+    """Width>1 multi-pulse schedules: per-dim pulses tile the halo with
+    contiguous offsets, and the per-pulse byte accounting still sums to
+    the canonical total (same regions, more messages)."""
+    names, widths, shape = case
+    pulses_per_dim = tuple(min(np_max, w) if w else 1 for w in widths)
+    sched = make_schedule(names, widths, pulses_per_dim=pulses_per_dim)
+    single = make_schedule(names, widths)
+    for d, w in enumerate(widths):
+        dim_pulses = sched.dim_pulses(d)
+        assert len(dim_pulses) == pulses_per_dim[d]
+        off = 0
+        for p in dim_pulses:
+            assert p.offset == off
+            off += p.width
+        assert off == w
+    s_multi = compute_exchange_stats(sched, shape, itemsize=4)
+    s_single = compute_exchange_stats(single, shape, itemsize=4)
+    assert s_multi["total_bytes"] == s_single["total_bytes"]
+    assert s_multi["serialized_critical_bytes"] == \
+        s_single["serialized_critical_bytes"]
+    assert s_multi["fused_phases"] == s_single["fused_phases"]
+    assert len(s_multi["serialized_pulse_bytes"]) == sched.total_pulses
+
+
 @given(schedule_case())
 @settings(max_examples=60, deadline=None)
 def test_exchange_stats_byte_conservation(case):

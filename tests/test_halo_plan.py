@@ -13,7 +13,7 @@ from repro.core.halo_plan import (
 )
 from repro.launch.mesh import make_mesh
 
-BACKENDS = ("serialized", "fused", "pallas")
+BACKENDS = ("serialized", "fused", "pallas", "signal")
 
 
 @pytest.fixture(scope="module")

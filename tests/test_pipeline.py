@@ -1,0 +1,271 @@
+"""StepPipeline subsystem: ledger, overlap schedules, signal backend, MD.
+
+Single-device (periodic self-exchange) checks run in-process; the
+multi-device versions live in tests/dist/check_halo.py / check_md.py.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map_norep
+from repro.core.halo_plan import HaloPlan, HaloSpec
+from repro.core.pipeline import (
+    PIPELINE_MODES,
+    SignalLedger,
+    StepFns,
+    StepPipeline,
+)
+from repro.core.schedule import make_schedule, split_width
+from repro.launch.mesh import make_mesh
+
+
+# --------------------------------------------------------------------------
+# width>1 multi-pulse schedules
+# --------------------------------------------------------------------------
+
+def test_split_width_balanced():
+    assert split_width(2, 2) == (1, 1)
+    assert split_width(5, 2) == (3, 2)
+    assert split_width(3, 3) == (1, 1, 1)
+
+
+def test_multi_pulse_schedule_offsets_tile_the_halo():
+    sched = make_schedule(("z", "y"), (3, 2), pulses_per_dim=(2, 2))
+    assert sched.total_pulses == 4
+    for d, w in enumerate(sched.widths):
+        pulses = sched.dim_pulses(d)
+        assert [p.offset for p in pulses] == \
+            [sum(q.width for q in pulses[:k]) for k in range(len(pulses))]
+        assert sum(p.width for p in pulses) == w
+    # global order still concatenates dims Z -> Y
+    assert [p.dim for p in sched.serialized_order()] == [0, 0, 1, 1]
+
+
+def test_multi_pulse_schedule_validation():
+    with pytest.raises(ValueError, match="cannot split"):
+        make_schedule(("z",), (1,), pulses_per_dim=(2,))
+    with pytest.raises(ValueError, match="at least one pulse"):
+        make_schedule(("z",), (2,), pulses_per_dim=(0,))
+    # width-0 dims degrade to a single no-op pulse
+    sched = make_schedule(("z", "y"), (2, 0), pulses_per_dim=(2, 2))
+    assert len(sched.dim_pulses(1)) == 1
+
+
+@pytest.mark.parametrize("backend",
+                         ("serialized", "fused", "pallas", "signal"))
+def test_width2_two_pulse_bitwise_identical(backend):
+    """Width-2 halos, one- vs two-pulse schedules: same bytes, same bits,
+    across all four backends (single-device periodic self-exchange; the
+    8-device version is in tests/dist/check_halo.py)."""
+    mesh = make_mesh((1,), ("z",))
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(6, 5).astype(np.float32))
+    shift = np.zeros((1, 5))
+    shift[0, 0] = 17.0
+    ref = np.asarray(HaloPlan.build(
+        HaloSpec(("z",), (2,), backend="serialized", wrap_shift=shift),
+        mesh).fwd(x))
+    for pulses in (None, (2,)):
+        plan = HaloPlan.build(
+            HaloSpec(("z",), (2,), backend=backend, wrap_shift=shift,
+                     pulses=pulses), mesh)
+        np.testing.assert_array_equal(np.asarray(plan.fwd(x)), ref)
+
+
+@pytest.mark.parametrize("backend",
+                         ("serialized", "fused", "pallas", "signal"))
+def test_width2_two_pulse_adjoint(backend):
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(
+        HaloSpec(("z",), (2,), backend=backend, pulses=(2,)), mesh)
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(6, 4).astype(np.float32))
+    y = jnp.asarray(rng.randn(8, 4).astype(np.float32))
+    lhs = float(jnp.vdot(plan.fwd(x), y))
+    rhs = float(jnp.vdot(x, plan.rev(y)))
+    assert abs(lhs - rhs) <= 1e-5 * max(abs(lhs), 1.0)
+
+
+# --------------------------------------------------------------------------
+# signal ledger
+# --------------------------------------------------------------------------
+
+def test_ledger_release_acquire_balance():
+    led = SignalLedger(depth=2, n_pulses=3)
+    st = led.init()
+    st = led.release(st, "fwd", 0)
+    st = led.acquire(st, "fwd", 0)
+    st = led.release(st, "rev", 1)
+    assert bool(led.consistent(st))
+    s = led.summary(st)
+    assert s["fwd"] == {"released": 3, "acquired": 3}
+    assert s["rev"] == {"released": 3, "acquired": 0}
+    assert int(led.outstanding(st).sum()) == 3
+
+
+def test_ledger_detects_unreleased_acquire():
+    led = SignalLedger(depth=2, n_pulses=1)
+    st = led.acquire(led.init(), "rev", 0)
+    assert not bool(led.consistent(st))
+
+
+def test_ledger_slot_parity_is_traceable():
+    led = SignalLedger(depth=2, n_pulses=2)
+
+    def f(k):
+        return led.release(led.init(), "fwd", k % 2).released
+
+    out = jax.jit(f)(jnp.int32(3))          # slot 1
+    assert int(out[led.slot("fwd", 1, 0)]) == 1
+    assert int(out[led.slot("fwd", 0, 0)]) == 0
+
+
+# --------------------------------------------------------------------------
+# step pipeline: off == double_buffer, bit for bit
+# --------------------------------------------------------------------------
+
+def _toy_fns():
+    def begin(state, f, ctx):
+        state = state + 0.1 * f
+        return state, state.sum(), state
+
+    def force(ext, ctx):
+        F = jnp.tanh(ext) * ctx
+        return F, {"pe": jnp.sum(F)}
+
+    def finish(state, aux, f, ctx):
+        state = state + 0.01 * f + 1e-3 * aux
+        return state, f, {"ke": jnp.sum(state)}
+
+    return StepFns(begin=begin, force=force, finish=finish)
+
+
+def _run_pipeline(mode, n_steps, backend="signal"):
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(HaloSpec(("z",), (2,), backend=backend), mesh)
+    pipe = StepPipeline.build(plan, _toy_fns(), mode=mode)
+    x0 = jnp.asarray(np.random.RandomState(0).randn(6, 4)
+                     .astype(np.float32))
+
+    def run(state, f):
+        return pipe.run_local(state, f, n_steps, jnp.float32(0.5))
+
+    fn = shard_map_norep(run, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=(P(), P(), P(), P()))
+    state, f, metrics, led = jax.jit(fn)(x0, jnp.zeros_like(x0))
+    return (np.asarray(state), np.asarray(f),
+            {k: np.asarray(v) for k, v in metrics.items()},
+            pipe.ledger.summary(jax.device_get(led)))
+
+
+@pytest.mark.parametrize("n_steps", (1, 2, 7))
+def test_pipeline_modes_bitwise_identical(n_steps):
+    ref = _run_pipeline("off", n_steps)
+    got = _run_pipeline("double_buffer", n_steps)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    for k in ref[2]:
+        assert ref[2][k].shape[0] == n_steps
+        np.testing.assert_array_equal(got[2][k], ref[2][k])
+
+
+@pytest.mark.parametrize("mode", PIPELINE_MODES)
+def test_pipeline_ledger_balances(mode):
+    _, _, _, summary = _run_pipeline(mode, 5)
+    assert summary["consistent"]
+    for kind in ("fwd", "rev"):
+        assert summary[kind]["released"] == 5
+        assert summary[kind]["acquired"] == 5
+
+
+def test_pipeline_rejects_bad_mode():
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(HaloSpec(("z",), (1,)), mesh)
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        StepPipeline.build(plan, _toy_fns(), mode="triple")
+
+
+# --------------------------------------------------------------------------
+# overlap + latency stats (plan-level, the ROADMAP items)
+# --------------------------------------------------------------------------
+
+def test_double_buffer_exposes_strictly_fewer_phases():
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    for backend in ("serialized", "fused", "pallas", "signal"):
+        plan = HaloPlan.build(
+            HaloSpec(("z", "y", "x"), (1, 1, 1), backend=backend), mesh)
+        off = plan.stats((8, 8, 8), pipeline="off")
+        db = plan.stats((8, 8, 8), pipeline="double_buffer")
+        assert db["exposed_phases_per_step"] < \
+            off["exposed_phases_per_step"]
+        assert off["overlapped_bytes_per_step"] == 0
+        assert db["overlapped_bytes_per_step"] == db["total_bytes"]
+
+
+def test_latency_model_two_pulse_small_domain_regime():
+    """Strong-scaling limit: with two pulses per dim the serialized path
+    pays twice the per-message latency; the fused (put-with-signal) path
+    still pays one latency per phase — the paper's crossover driver."""
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    plan = HaloPlan.build(
+        HaloSpec(("z", "y", "x"), (2, 2, 2), pulses=(2, 2, 2)), mesh)
+    lat = plan.stats((4, 4, 4))["latency"]
+    assert lat["serialized_messages"] == 6
+    assert len(lat["fused_phase_messages"]) == 3
+    assert lat["serialized_time_s"] > lat["fused_time_s"]
+    # tiny domains: latency-dominated, speedup approaches 6/3
+    tiny = HaloPlan.build(
+        HaloSpec(("z", "y", "x"), (2, 2, 2), pulses=(2, 2, 2)), mesh) \
+        .stats((2, 2, 2), bandwidth_Bps=1e15)
+    assert tiny["latency"]["fused_speedup"] == pytest.approx(2.0, rel=1e-3)
+
+
+def test_stats_latency_configurable():
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(HaloSpec(("z",), (1,)), mesh)
+    fast = plan.stats((8,), link_latency_s=1e-9)["latency"]
+    slow = plan.stats((8,), link_latency_s=1e-3)["latency"]
+    assert slow["serialized_time_s"] > fast["serialized_time_s"]
+
+
+# --------------------------------------------------------------------------
+# MD engine through the pipeline (single device; 8-device in tests/dist)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipeline", PIPELINE_MODES)
+def test_md_engine_pipeline_bitwise(pipeline):
+    from repro.core.md import MDEngine, make_grappa_like
+
+    sys_ = make_grappa_like(200, seed=5)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    spec = HaloSpec(("z", "y", "x"), (1, 1, 1), backend="serialized")
+    ref_eng = MDEngine(sys_, mesh, spec)
+    (cf_ref, _), m_ref, _ = ref_eng.simulate(12)
+
+    eng = MDEngine(sys_, mesh,
+                   HaloSpec(("z", "y", "x"), (1, 1, 1), backend="signal"),
+                   pipeline=pipeline)
+    (cf, _), m, _ = eng.simulate(12)
+    np.testing.assert_array_equal(np.asarray(jax.device_get(cf)),
+                                  np.asarray(jax.device_get(cf_ref)))
+    for k in m_ref:
+        np.testing.assert_array_equal(np.asarray(m[k]),
+                                      np.asarray(m_ref[k]))
+
+
+def test_md_engine_overlap_stats_and_validation():
+    from repro.core.md import MDEngine, make_grappa_like
+
+    sys_ = make_grappa_like(200, seed=5)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        MDEngine(sys_, mesh, pipeline="buffered")
+    with pytest.raises(ValueError, match="widths must be >= 1"):
+        MDEngine(sys_, mesh, HaloSpec(("z", "y", "x"), (1, 0, 1)))
+    eng = MDEngine(sys_, mesh, pipeline="double_buffer")
+    ov = eng.overlap_stats()
+    assert ov["pipeline"] == "double_buffer"
+    assert ov["overlapped_bytes_per_step"] > 0
