@@ -4,11 +4,15 @@ Usage (positional args kept for benchmarks/figures.py compatibility):
 
   python -m benchmarks.md_worker BACKEND N_ATOMS [STEPS]
       [--pipeline {off,double_buffer}] [--halo-width N]
-      [--halo-pulses N] [--out results/dryrun]
+      [--halo-pulses N] [--force-backend {dense,sparse,pallas}]
+      [--safety F] [--out results/dryrun]
 
 Emits one JSON record with per-step timing plus the plan's overlap model
-(``overlapped_bytes``, ``exposed_phases``); with ``--out`` the record is
-also written to ``<out>/md__<backend>__<n>__<pipeline>[__wW][__pP].json``.
+(``overlapped_bytes``, ``exposed_phases``), the alpha-beta latency model
+(``modeled_*``, for the modeled-vs-measured figures), and the force
+engine's evaluated-work accounting (``prune_ratio``, ``pairs_per_s``);
+with ``--out`` the record is also written to
+``<out>/md__<backend>__<n>__<pipeline>[__wW][__pP][__fbB][__sS].json``.
 """
 import argparse
 import json
@@ -18,7 +22,7 @@ from pathlib import Path
 import jax
 
 from repro.core.halo_plan import HaloSpec
-from repro.core.md import MDEngine, make_grappa_like
+from repro.core.md import MDEngine, force_backends, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
 
@@ -31,6 +35,11 @@ def main():
                     choices=("off", "double_buffer"))
     ap.add_argument("--halo-width", type=int, default=1)
     ap.add_argument("--halo-pulses", type=int, default=1)
+    ap.add_argument("--force-backend", default="dense",
+                    choices=force_backends(),
+                    help="NB force engine (pair_schedule registry)")
+    ap.add_argument("--safety", type=float, default=2.2,
+                    help="cell capacity safety factor (occupancy sweep)")
     ap.add_argument("--out", default=None,
                     help="directory for the JSON record (e.g. "
                          "results/dryrun)")
@@ -43,7 +52,9 @@ def main():
                     backend=args.backend,
                     pulses=None if args.halo_pulses == 1
                     else (args.halo_pulses,) * 3)
-    eng = MDEngine(system, mesh, spec, pipeline=args.pipeline)
+    eng = MDEngine(system, mesh, spec, pipeline=args.pipeline,
+                   force_backend=args.force_backend,
+                   capacity_safety=args.safety)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
     t0 = time.perf_counter()
@@ -51,8 +62,9 @@ def main():
     dt = (time.perf_counter() - t0) / args.steps
 
     # device-side decomposition (paper Fig. 6 analogue): time the force
-    # pass (halo fwd + NB kernel + halo rev) vs the NB kernel alone
+    # pass (halo fwd + NB kernel + halo rev) through the selected backend
     cf, ci = state
+    jax.block_until_ready(eng.force_fn(cf, ci))     # compile outside timing
     t0 = time.perf_counter()
     for _ in range(10):
         jax.block_until_ready(eng.force_fn(cf, ci))
@@ -60,8 +72,11 @@ def main():
 
     stats = eng.halo_stats()
     overlap = eng.overlap_stats()
+    lat = stats["latency"]
+    pair = eng.pair_stats()
+    n_dev = len(jax.devices())
     record = {
-        "devices": len(jax.devices()),
+        "devices": n_dev,
         "mode": args.backend,
         "pipeline": args.pipeline,
         "halo_width": w,
@@ -74,10 +89,25 @@ def main():
         "halo_total_bytes": stats["total_bytes"],
         "halo_critical_bytes":
         stats[f"{eng.plan.backend.critical_path}_critical_bytes"],
+        # index-payload + occupancy-adjusted accounting (HaloPlan.stats)
+        "halo_bytes_index": stats["bytes_index"],
+        "halo_useful_bytes": stats["useful_bytes"],
+        "halo_occupancy": stats["occupancy"],
         # per-step overlap model (the step-pipeline scaling story)
         "overlapped_bytes": overlap["overlapped_bytes_per_step"],
         "exposed_phases": overlap["exposed_phases_per_step"],
         "exchanged_bytes": overlap["exchanged_bytes_per_step"],
+        # alpha-beta latency model (modeled-vs-measured crossover)
+        "modeled_serialized_s": lat["serialized_time_s"],
+        "modeled_fused_s": lat["fused_time_s"],
+        "modeled_speedup": lat["fused_speedup"],
+        # force engine: evaluated-work accounting (pair_schedule)
+        "force_backend": args.force_backend,
+        "capacity_safety": args.safety,
+        "prune_ratio": pair["prune_ratio"],
+        "evaluated_slot_pairs_per_step": pair["evaluated_slot_pairs"],
+        "dense_slot_pairs_per_step": pair["dense_slot_pairs"],
+        "pairs_per_s": pair["evaluated_slot_pairs"] * n_dev / dt,
     }
     print(json.dumps(record))
     if args.out:
@@ -88,6 +118,10 @@ def main():
             name += f"__w{w}"
         if args.halo_pulses != 1:
             name += f"__p{args.halo_pulses}"
+        if args.force_backend != "dense":
+            name += f"__fb{args.force_backend}"
+        if args.safety != 2.2:
+            name += f"__s{args.safety:g}"
         (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
 
 

@@ -3,8 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
+  PYTHONPATH=src python -m benchmarks.run --suite nb [--smoke]
 
 Default mode is quick (CI-sized); --full runs the complete sweeps.
+``--suite nb`` runs the NB force-engine suite (dense vs sparse vs pallas
+pair schedules) and writes ``results/BENCH_nb.json``; ``--smoke`` is the
+CI-sized variant (single device, interpret mode).
 """
 import argparse
 import sys
@@ -18,15 +22,27 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--suite", default=None, choices=("paper", "nb"),
+                    help="named suite: 'nb' = force-engine bench "
+                         "(BENCH_nb.json), 'paper' = all figures")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized nb suite (implies quick mode)")
     args = ap.parse_args()
 
-    names = list(ALL) if not args.only else args.only.split(",")
+    if args.suite == "nb":
+        names = ["nb"]
+    elif args.only:
+        names = args.only.split(",")
+    else:
+        names = [n for n in ALL if n != "nb"]
     print("name,us_per_call,derived")
     for name in names:
         fn = ALL[name]
         t0 = time.time()
         try:
-            if name in ("fig3", "fig6", "lm"):
+            if name == "nb":
+                fn(smoke=args.smoke or not args.full)
+            elif name in ("fig3", "fig6", "lm"):
                 fn(quick=not args.full)
             else:
                 fn()

@@ -137,11 +137,74 @@ def halo_table():
               f"{exposed} | {ovl_b} | {coll:.3e} |")
 
 
+def nb_table():
+    """Force-engine bench (results/BENCH_nb.json): dense vs sparse vs
+    pallas pair schedules, with the prune ratio (dense-over-evaluated
+    slot pairs) per cell — the ``benchmarks/run.py --suite nb`` output.
+    """
+    p = Path(__file__).parent / "BENCH_nb.json"
+    if not p.exists():
+        print("\n(no BENCH_nb.json — run `python -m benchmarks.run "
+              "--suite nb`)")
+        return
+    r = json.loads(p.read_text())
+    mode = "SMOKE (CI-sized — not the baseline; regenerate with " \
+        "`--suite nb --full`)" if r.get("smoke") else "full sweep"
+    print(f"\nsuite mode: {mode}")
+    print("\n| dev | atoms | safety | force backend | step ms | "
+          "slot pairs/step | prune ratio | pairs/s |")
+    print("|" + "---|" * 8)
+    for c in r["cells"]:
+        print(f"| {c['devices']} | {c['n_atoms']} | "
+              f"{c['capacity_safety']:g} | {c['force_backend']} | "
+              f"{c['ms_per_step']:.2f} | "
+              f"{c['evaluated_slot_pairs_per_step']} | "
+              f"{c['prune_ratio']:.2f}x | {c['pairs_per_s']:.3e} |")
+    print("\n| dev | atoms | safety | slot-pair reduction | "
+          "sparse step speedup |")
+    print("|" + "---|" * 5)
+    for s in r.get("summary", []):
+        print(f"| {s['devices']} | {s['n_atoms']} | {s['safety']:g} | "
+              f"{s['slot_pair_reduction']:.2f}x | "
+              f"{s['sparse_step_speedup']:.2f}x |")
+    print(f"\n>= 2x slot-pair reduction at default 2.2 safety: "
+          f"{r.get('target_2x_at_default_safety')}")
+
+
+def force_table():
+    """MD force-engine dry-run cells (mdforce__*.json): chosen backend +
+    prune ratio as recorded by ``repro.launch.dryrun --md``."""
+    files = sorted(DRY.glob("mdforce__*.json"))
+    if not files:
+        return
+    print("\n| dd | halo backend | force backend | prune ratio | "
+          "slot pairs/step | occupancy | index B | useful B |")
+    print("|" + "---|" * 8)
+    for p in files:
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | "
+                  f"{r.get('force_backend', '?')} | FAIL "
+                  f"{r.get('error', '')[:40]} |" + " |" * 4)
+            continue
+        ps = r["pair_stats"]
+        hs = r["halo_stats"]
+        print(f"| {r['dd']} | {r['backend']} | {r['force_backend']} | "
+              f"{ps['prune_ratio']:.2f}x | "
+              f"{ps['evaluated_slot_pairs']} | "
+              f"{hs['occupancy']:.3f} | {hs['bytes_index']} | "
+              f"{hs['useful_bytes']} |")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which in ("all", "halo"):
         print("\n## Halo exchange (plan-reported)")
         halo_table()
+    if which in ("all", "nb"):
+        print("\n## NB force engine (pair schedules)")
+        nb_table()
+        force_table()
     if which in ("all", "dryrun"):
         print("## Dry-run status")
         dryrun_table("single")

@@ -518,7 +518,9 @@ class HaloPlan:
               feature_elems: Optional[int] = None,
               pipeline: str = "off",
               link_latency_s: float = DEFAULT_LINK_LATENCY_S,
-              bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS) -> dict:
+              bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS,
+              index_elems: int = 0, index_itemsize: int = 4,
+              occupancy: Optional[float] = None) -> dict:
         """Canonical byte/critical-path stats for this plan's schedule.
 
         Defaults derive from the spec's dtype / feature layout; results are
@@ -528,16 +530,32 @@ class HaloPlan:
         step-``pipeline`` overlap model (``exposed_phases_per_step`` /
         ``overlapped_bytes_per_step`` under ``"off"`` or
         ``"double_buffer"`` — see :func:`overlap_model`).
+
+        ``index_elems`` accounts side-channel *index* payloads the
+        canonical float accounting excludes (the MD engine's ``(K, 2)``
+        int32 ``cell_i`` exchange: ``index_elems=2 * K``), reported as
+        ``bytes_index`` over the same exchanged regions.  ``occupancy``
+        (fraction of payload elements carrying real data — for MD, atoms
+        per capacity slot) yields ``useful_bytes``: the padded capacity
+        slots are exchanged but carry nothing.
         """
         if itemsize is None:
             itemsize = int(np.dtype(self.spec.dtype).itemsize)
         if feature_elems is None:
             feature_elems = self.spec.feature_elems
         key = (tuple(local_shape), itemsize, feature_elems, pipeline,
-               link_latency_s, bandwidth_Bps)
+               link_latency_s, bandwidth_Bps, index_elems, index_itemsize,
+               occupancy)
         if key not in self._stats_cache:
             stats = dict(compute_exchange_stats(
                 self.sched, tuple(local_shape), itemsize, feature_elems))
+            # exchanged region volume in cells (payload-independent)
+            cells = stats["total_bytes"] // max(feature_elems * itemsize, 1)
+            stats["bytes_index"] = cells * index_elems * index_itemsize
+            stats["occupancy"] = occupancy
+            stats["useful_bytes"] = (
+                None if occupancy is None
+                else int(round(stats["total_bytes"] * occupancy)))
             stats["latency"] = latency_model(stats, link_latency_s,
                                              bandwidth_Bps)
             overlap = overlap_model(stats, self.backend.critical_path,

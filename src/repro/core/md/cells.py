@@ -122,6 +122,31 @@ def bin_to_cells(pos, feats_f, feats_i, layout: CellLayout, domain_index):
     return cell_f, cell_i, overflow
 
 
+def cell_counts(cell_i) -> jnp.ndarray:
+    """Per-cell occupied-slot counts: (..., K, Pi) int arrays -> (...).
+
+    Binning packs each cell's atoms into a contiguous slot prefix (see
+    ``bin_to_cells``), so ``counts`` is also the first padding slot — the
+    pair-schedule prune relies on both properties.
+    """
+    return jnp.sum(cell_i[..., 0] >= 0, axis=-1).astype(jnp.int32)
+
+
+def cell_bounds(pos, cell_i, big: float = 1e30):
+    """Per-cell position bounding boxes over valid slots.
+
+    pos: (..., K, 3); returns (lo, hi) of shape (..., 3).  Empty cells
+    yield inverted boxes at ``(+big, -big)`` — finite sentinels, so
+    box-to-box gap computations stay NaN-free and any pair touching an
+    empty cell lands beyond every cutoff.
+    """
+    valid = (cell_i[..., 0] >= 0)[..., None]
+    big = jnp.asarray(big, pos.dtype)
+    lo = jnp.min(jnp.where(valid, pos, big), axis=-2)
+    hi = jnp.max(jnp.where(valid, pos, -big), axis=-2)
+    return lo, hi
+
+
 def cells_to_pool(cell_f, cell_i):
     """Flatten cell arrays back into the (P, ...) atom pool."""
     K = cell_f.shape[3]

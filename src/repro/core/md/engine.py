@@ -42,6 +42,17 @@ from repro.core.md import integrate
 from repro.core.md.cells import CellLayout, choose_layout
 from repro.core.md.domain import AXES, domain_index, rebin
 from repro.core.md.forces import compute_forces
+from repro.core.md.pair_schedule import (
+    PAIR_BUCKET,
+    SLOT_QUANTUM,
+    PairSchedule,
+    force_backends,
+    get_force_backend,
+    probe_pallas,
+    prune_local,
+    prune_radius,
+)
+from repro.core.md.schedule_opt import bucket
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
 from repro.core.pipeline import PIPELINE_MODES, StepFns, StepPipeline
@@ -56,12 +67,22 @@ class MDEngine:
     ``pipeline`` selects the multi-step schedule (``"off"`` or
     ``"double_buffer"``, see :class:`repro.core.pipeline.StepPipeline`);
     both produce bitwise-identical trajectories.
+
+    ``force_backend`` selects the NB force engine
+    (:mod:`repro.core.md.pair_schedule`): ``"dense"`` (default) is the
+    unchanged 14-zone loop and keeps trajectories bitwise-identical to
+    earlier engines; ``"sparse"`` / ``"pallas"`` execute the pruned
+    cell-pair schedule (rebuilt every rebin, off the hot path) and match
+    dense to tolerance.  ``capacity_safety`` is the per-cell slot
+    headroom factor fed to :func:`choose_layout` — the padding the
+    pruned backends stop paying for.
     """
 
     def __init__(self, system: MDSystem, mesh: Mesh,
                  spec: HaloSpec | None = None,
                  r_list_factor: float = 1.08, mig_frac: float = 0.125,
-                 pipeline: str = "off"):
+                 pipeline: str = "off", force_backend: str = "dense",
+                 capacity_safety: float = 2.2):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -73,15 +94,43 @@ class MDEngine:
         if min(spec.widths) < 1:
             raise ValueError("MD halo widths must be >= 1 (the NB stencil "
                              "consumes one halo cell layer)")
+        if force_backend not in force_backends():
+            raise ValueError(f"unknown force backend {force_backend!r}; "
+                             f"available: {force_backends()}")
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
+        self.force_backend = force_backend
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
         self.layout = choose_layout(system.box, mesh_shape, r_list,
-                                    system.n_atoms)
+                                    system.n_atoms, safety=capacity_safety)
         self.axis_sizes = mesh_shape
         self.mig_cap = max(64, int(self.layout.pool * mig_frac))
+        self.pair_schedule = None
+        self.r_prune = prune_radius(system.params)
+        self._sched_exec = None       # (sel, n_exec, k_exec) of last prune
+        if force_backend != "dense":
+            self.pair_schedule = PairSchedule.build(self.layout)
+            self._pair_stats = self.pair_schedule.slot_pair_stats()
+            if force_backend == "pallas":
+                # compile-time kernel failures latch the jnp fallback
+                # here, before any block program is built (see
+                # pair_schedule.probe_pallas)
+                probe_pallas(system.params.ff, interpret=spec.interpret)
+        else:
+            # dense never builds a worklist (degenerate one-global-cell
+            # layouts stay supported); mirror its accounting directly
+            from repro.core.md.forces import stencil_pairs
+            n_dense = len(stencil_pairs()) * self.layout.n_local_cells
+            self._pair_stats = {
+                "n_pairs_dense": n_dense,
+                "k_capacity": self.layout.capacity,
+                "dense_slot_pairs": n_dense * self.layout.capacity ** 2,
+                "evaluated_slot_pairs": n_dense * self.layout.capacity ** 2,
+                "prune_ratio": 1.0,
+            }
+        self._pair_stats["force_backend"] = force_backend
         dt = system.pos.dtype
         if spec.wrap_shift is None:
             ws = np.zeros((3, 4), dt)
@@ -107,8 +156,34 @@ class MDEngine:
         return self.plan.spec.backend
 
     def halo_stats(self) -> dict:
-        """Plan-reported bytes/critical-path stats at this DD layout."""
-        return self.plan.stats(self.layout.cells_per_domain)
+        """Plan-reported bytes/critical-path stats at this DD layout.
+
+        On top of the canonical float payload this accounts the ``(K, 2)``
+        int32 ``cell_i`` exchange (``bytes_index`` — hoisted to once per
+        block, hence reported separately from the per-step payload) and
+        the occupancy-adjusted ``useful_bytes``: the capacity padding is
+        exchanged but carries no atoms.
+        """
+        K = self.layout.capacity
+        gz, gy, gx = self.layout.global_cells
+        occupancy = self.system.n_atoms / float(gz * gy * gx * K)
+        return self.plan.stats(self.layout.cells_per_domain,
+                               index_elems=2 * K, index_itemsize=4,
+                               occupancy=occupancy)
+
+    def pair_stats(self) -> dict:
+        """Evaluated-slot-pair accounting of the latest pruned block.
+
+        Per domain per step; ``prune_ratio`` is the dense-over-evaluated
+        work reduction (1.0 for the dense backend).
+        ``pallas_fallback`` flags a ``"pallas"`` engine whose kernel
+        failed and is actually running the jnp twin.
+        """
+        out = dict(self._pair_stats)
+        if self.force_backend == "pallas":
+            from repro.core.md.pair_schedule import pallas_fallback_active
+            out["pallas_fallback"] = pallas_fallback_active()
+        return out
 
     def overlap_stats(self) -> dict:
         """Per-step overlap model at this engine's pipeline mode."""
@@ -148,6 +223,19 @@ class MDEngine:
         f_local = self.plan.rev_local(self._pad_force(F_trim, ext_f.shape))
         return f_local, lax.psum(pe, AXES)
 
+    def _force_pass_sched(self, cell_f, cell_i, sel, n_exec, k_exec):
+        """Schedule-driven force pass (device-local, pruned backends)."""
+        ext_f = self.plan.fwd_local(cell_f[..., :4])
+        ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
+        backend_fn = get_force_backend(self.force_backend)
+        F_trim, pe = backend_fn(
+            self._trim_ext(ext_f), self._trim_ext(ext_i), self.layout,
+            self.system.params.ff, sched=self.pair_schedule,
+            sel=lax.slice(sel.reshape(-1), (0,), (n_exec,)),
+            k_exec=k_exec, interpret=self.spec.interpret)
+        f_local = self.plan.rev_local(self._pad_force(F_trim, ext_f.shape))
+        return f_local, lax.psum(pe, AXES)
+
     # ---- step physics, split at the halo seams (StepFns) -------------------
 
     def _make_step_fns(self) -> StepFns:
@@ -155,12 +243,23 @@ class MDEngine:
 
         ``ctx`` carries the block-constant arrays: ``cell_i`` (atom
         ids/types never change within a block — migration runs between
-        blocks) and its pre-exchanged extension ``ext_i``, hoisted out of
-        the step loop.
+        blocks), its pre-exchanged extension ``ext_i``, and — for the
+        pruned force backends — the block's pair schedule (``pair_sel``
+        surviving-pair prefix + static ``k_exec`` slot depth), so both
+        pipeline modes execute the same worklist.
         """
         params = self.system.params
         mass, dt = params.mass, params.dt
         layout, ff = self.layout, params.ff
+        backend_fn = get_force_backend(self.force_backend)
+        sched, interp = self.pair_schedule, self.spec.interpret
+
+        def eval_forces(ext_f_trim, ext_i_trim, ctx):
+            if "pair_sel" not in ctx:      # dense: the unchanged path
+                return compute_forces(ext_f_trim, ext_i_trim, layout, ff)
+            return backend_fn(ext_f_trim, ext_i_trim, layout, ff,
+                              sched=sched, sel=ctx["pair_sel"],
+                              k_exec=ctx["k_exec"], interpret=interp)
 
         def begin(cell_f, force, ctx):
             valid = ctx["cell_i"][..., 0] >= 0
@@ -173,8 +272,8 @@ class MDEngine:
             return cell_f, vel_half, cell_f[..., :4]
 
         def force(ext_f, ctx):
-            F_trim, pe = compute_forces(self._trim_ext(ext_f),
-                                        ctx["ext_i_trim"], layout, ff)
+            F_trim, pe = eval_forces(self._trim_ext(ext_f),
+                                     ctx["ext_i_trim"], ctx)
             return self._pad_force(F_trim, ext_f.shape), \
                 {"pe": lax.psum(pe, AXES)}
 
@@ -199,15 +298,27 @@ class MDEngine:
 
     # ---- programs ----------------------------------------------------------
 
+    def _block_ctx(self, cell_i):
+        return {"cell_i": cell_i,
+                "ext_i_trim": self._trim_ext(
+                    self.plan.fwd_local(cell_i, wrap_shift=None))}
+
     def _build_programs(self):
         layout, mig_cap = self.layout, self.mig_cap
         self.pipeline = StepPipeline.build(self.plan, self._make_step_fns(),
                                            mode=self.pipeline_mode)
 
         def block(cell_f, cell_i, force, n_steps):
-            ctx = {"cell_i": cell_i,
-                   "ext_i_trim": self._trim_ext(
-                       self.plan.fwd_local(cell_i, wrap_shift=None))}
+            ctx = self._block_ctx(cell_i)
+            cell_f, f_last, metrics, _led = self.pipeline.run_local(
+                cell_f, force, n_steps, ctx)
+            return cell_f, cell_i, f_last, metrics
+
+        def block_sched(cell_f, cell_i, force, sel, n_steps, n_exec,
+                        k_exec):
+            ctx = self._block_ctx(cell_i)
+            ctx["pair_sel"] = lax.slice(sel.reshape(-1), (0,), (n_exec,))
+            ctx["k_exec"] = k_exec
             cell_f, f_last, metrics, _led = self.pipeline.run_local(
                 cell_f, force, n_steps, ctx)
             return cell_f, cell_i, f_last, metrics
@@ -217,6 +328,18 @@ class MDEngine:
             force, pe = self._force_pass(new_f[..., :4], new_i)
             force = jnp.where(new_i[..., 0:1] >= 0, force, 0.0)
             return new_f, new_i, force, diag
+
+        def do_prune(cell_f, cell_i):
+            ext_f = self.plan.fwd_local(cell_f[..., :4])
+            ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
+            sel, n_keep, occ = prune_local(
+                self.pair_schedule, self._trim_ext(ext_f),
+                self._trim_ext(ext_i), self.r_prune)
+            # the exec shapes must agree across the SPMD mesh: every
+            # domain sizes to the global worst case
+            n_keep = lax.pmax(n_keep, AXES)
+            occ = lax.pmax(occ, AXES)
+            return sel[None, None, None], n_keep, occ
 
         spec = self._spec
         self.block_fn = jax.jit(
@@ -231,9 +354,43 @@ class MDEngine:
         self.rebin_fn = jax.jit(shard_map_norep(
             do_rebin, mesh=self.mesh, in_specs=(spec, spec),
             out_specs=(spec, spec, spec, P())))
-        self.force_fn = jax.jit(shard_map_norep(
+        self._force_fn_dense = jax.jit(shard_map_norep(
             lambda f, i: self._force_pass(f[..., :4], i),
             mesh=self.mesh, in_specs=(spec, spec), out_specs=(spec, P())))
+        if self.force_backend != "dense":
+            self.block_sched_fn = jax.jit(
+                shard_map_norep(
+                    block_sched, mesh=self.mesh,
+                    in_specs=(spec, spec, spec, spec, None, None, None),
+                    out_specs=(spec, spec, spec, P()),
+                ),
+                static_argnums=(4, 5, 6),
+            )
+            self.prune_fn = jax.jit(shard_map_norep(
+                do_prune, mesh=self.mesh, in_specs=(spec, spec),
+                out_specs=(spec, P(), P())))
+            self._force_fn_sched = jax.jit(
+                shard_map_norep(
+                    self._force_pass_sched, mesh=self.mesh,
+                    in_specs=(spec, spec, spec, None, None),
+                    out_specs=(spec, P()),
+                ),
+                static_argnums=(3, 4),
+            )
+
+    def force_fn(self, cell_f, cell_i):
+        """One force pass (halo fwd -> NB -> halo rev) on global arrays.
+
+        Dispatches to the engine's force backend; the pruned backends use
+        the schedule of the most recent rebin (``simulate`` refreshes it),
+        falling back to a fresh prune when none exists yet.
+        """
+        if self.force_backend == "dense":
+            return self._force_fn_dense(cell_f, cell_i)
+        if self._sched_exec is None:
+            self._refresh_schedule(cell_f, cell_i)
+        sel, n_exec, k_exec = self._sched_exec
+        return self._force_fn_sched(cell_f, cell_i, sel, n_exec, k_exec)
 
     # ---- state init ----------------------------------------------------------
 
@@ -269,6 +426,27 @@ class MDEngine:
 
     # ---- drivers ---------------------------------------------------------------
 
+    def _refresh_schedule(self, cell_f, cell_i):
+        """Re-prune the pair worklist for the next block (nstlist cadence).
+
+        Runs right after ``rebin_fn`` — the same off-hot-path slot as the
+        migration/NS program (paper §5.4).  The host reads two scalars
+        (global surviving-pair count, global max cell occupancy) and
+        buckets them into the static exec shapes of the block program.
+        """
+        if self.force_backend == "dense":
+            return None
+        sel, n_keep, occ = self.prune_fn(cell_f, cell_i)
+        n_keep = int(jax.device_get(n_keep))
+        occ = int(jax.device_get(occ))
+        n_exec = bucket(n_keep, PAIR_BUCKET, self.pair_schedule.n_pairs)
+        k_exec = bucket(occ, SLOT_QUANTUM, self.layout.capacity)
+        self._pair_stats = self.pair_schedule.slot_pair_stats(
+            n_exec=n_exec, k_exec=k_exec, n_keep=n_keep, max_occupancy=occ)
+        self._pair_stats["force_backend"] = self.force_backend
+        self._sched_exec = (sel, n_exec, k_exec)
+        return self._sched_exec
+
     def simulate(self, n_steps: int, state=None, collect=True):
         """Run n_steps in nstlist-sized TPU-resident blocks."""
         nst = self.system.params.nstlist
@@ -277,18 +455,25 @@ class MDEngine:
         else:
             cell_f, cell_i = state
         cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
+        sched = self._refresh_schedule(cell_f, cell_i)
         all_metrics = []
         diags = [jax.device_get(diag)]
         done = 0
         while done < n_steps:
             take = min(nst, n_steps - done)
-            cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i, force,
-                                                     take)
+            if sched is None:
+                cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
+                                                         force, take)
+            else:
+                sel, n_exec, k_exec = sched
+                cell_f, cell_i, force, m = self.block_sched_fn(
+                    cell_f, cell_i, force, sel, take, n_exec, k_exec)
             if collect:
                 all_metrics.append(jax.device_get(m))
             done += take
             if done < n_steps:
                 cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
+                sched = self._refresh_schedule(cell_f, cell_i)
                 diags.append(jax.device_get(diag))
         metrics = {}
         if collect and all_metrics:

@@ -12,6 +12,12 @@ which is precisely why the one-directional staged halo suffices).
 Periodic images are pre-shifted by the halo exchange (coordShift), so no
 minimum-image logic appears here — exactly like GROMACS' shifted halo
 coordinates.
+
+``compute_forces`` is the ``"dense"`` entry of the force-backend registry
+(:mod:`repro.core.md.pair_schedule`): it evaluates every K x K slot pair
+of every zone product and is the bitwise trajectory reference that the
+pruned ``"sparse"`` / ``"pallas"`` pair-schedule engines are validated
+against.
 """
 from __future__ import annotations
 
@@ -44,8 +50,14 @@ def _zone(arr, off, shape):
     return arr[off[0]:off[0] + cz, off[1]:off[1] + cy, off[2]:off[2] + cx]
 
 
-def _pair_terms(dx, r2, qa, qb, eps, sig, ff: ForceField, mask):
-    """Per-pair scalar force factor (F = fac * dx) and potential energy."""
+def pair_terms(dx, r2, qa, qb, eps, sig, ff: ForceField, mask):
+    """Per-pair scalar force factor (F = fac * dx) and potential energy.
+
+    Shared by the dense 14-zone loop below and the sparse pair-schedule
+    engine (:mod:`repro.core.md.pair_schedule`), so every force backend
+    evaluates the identical per-pair math and differs only in which slot
+    pairs it touches and in reduction order.
+    """
     dtype = dx.dtype
     r2safe = jnp.where(mask, r2, jnp.asarray(1.0, dtype))
     inv_r2 = 1.0 / r2safe
@@ -109,8 +121,8 @@ def compute_forces(ext_f, ext_i, layout: CellLayout, ff: ForceField):
 
         eps = eps_t[typ_a[..., :, None], typ_b[..., None, :]]
         sig = sig_t[typ_a[..., :, None], typ_b[..., None, :]]
-        fac, pe = _pair_terms(dx, r2, q_a[..., :, None], q_b[..., None, :],
-                              eps, sig, ff, mask)
+        fac, pe = pair_terms(dx, r2, q_a[..., :, None], q_b[..., None, :],
+                             eps, sig, ff, mask)
         # barriers pin the K-wide pair reductions to standalone, canonical
         # compilations: their partial-sum order must not depend on how the
         # surrounding program (halo backend, step-pipeline schedule) fuses,

@@ -1,0 +1,417 @@
+"""Pruned cell-pair force schedules: the sparse NB engine (paper §5.4).
+
+The paper's speedups depend on the non-bonded force kernels — the hot
+loop — staying saturated while halo communication overlaps (§5.4).
+GROMACS gets there with cluster pair lists: built coarsely at
+domain-decomposition time, pruned on the ``nstlist`` cadence, and executed
+by batched cluster-pair kernels (Páll et al. 2020).  The dense engine path
+(:func:`repro.core.md.forces.compute_forces`) ignores all of that: it
+evaluates every ``K x K`` slot pair of all 14 eighth-shell zone products
+over the full cell grid, padding slots included.
+
+This module is the pair-list analogue for the cell scheme:
+
+* :class:`PairSchedule` — the **static worklist**: all
+  ``14 * n_local_cells`` eighth-shell cell pairs of one domain, enumerated
+  once per :class:`~repro.core.md.cells.CellLayout` as flat indices into
+  the trimmed extended (home + one halo layer) cell array.  This is the
+  DD-time coarse list build.
+
+* :func:`prune_local` — the ``nstlist``-cadence **prune**: runs device-
+  local (inside the engine's shard_map) right where ``rebin_fn`` already
+  executes, off the hot step path (see
+  :mod:`repro.core.md.schedule_opt`).  Pairs are dropped when either cell
+  is empty (cell membership is frozen within a block, so this is exact)
+  or when the cells' atom bounding boxes are further apart than the prune
+  radius (:func:`prune_radius`, the Verlet-buffer analogue: ``r_cut``
+  plus twice the expected per-block drift).  Survivors are packed
+  front-first so a static-shape prefix of the worklist covers them.
+
+* :func:`get_force_backend` — a registry of force engines sharing one
+  signature:
+
+  - ``"dense"``  — the unchanged 14-zone jnp loop; the **bitwise
+    reference** (trajectories are identical to the pre-schedule engine).
+  - ``"sparse"`` — jnp evaluation over the pruned worklist only, packed
+    ``(N, K_exec, 4)`` A/B batches with gather/scatter-add epilogues.
+  - ``"pallas"`` — the same batches executed by the tuned Pallas
+    cluster-pair kernel (:func:`repro.kernels.nonbonded.pair_forces_accum`,
+    interpret mode on CPU) with a jnp fallback if the kernel is
+    unavailable on the current backend.
+
+  Sparse and pallas match dense to tolerance (summation order differs);
+  they are *not* bitwise.  ``K_exec`` (the evaluated slot depth) can be
+  smaller than the layout capacity ``K`` because binning packs each
+  cell's atoms into a contiguous slot prefix — the 2.2x capacity safety
+  padding is what the schedule stops paying for.
+
+The engine threads the block-constant schedule (``pair_sel``, ``k_exec``)
+through the :class:`~repro.core.pipeline.step_pipeline.StepFns` context,
+so both pipeline modes (``off`` / ``double_buffer``) execute the same
+pruned worklist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.md.cells import CellLayout, cell_bounds, cell_counts
+from repro.core.md.forces import compute_forces, pair_terms
+from repro.core.md.system import ForceField, MDParams
+
+# exec-shape quanta: surviving pair counts bucket to multiples of
+# PAIR_BUCKET and slot depths to multiples of SLOT_QUANTUM (matching the
+# capacity padding in choose_layout), so the per-block prune produces only
+# a handful of distinct compiled block programs
+PAIR_BUCKET = 64
+SLOT_QUANTUM = 4
+
+_BIG = 1e30  # empty-cell bounding-box sentinel (finite: no inf-inf NaNs)
+
+
+# --------------------------------------------------------------------------
+# static worklist (built once per layout — the DD-time list build)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PairSchedule:
+    """Static eighth-shell cell-pair worklist of one domain.
+
+    ``cell_a`` / ``cell_b`` are flat indices into the trimmed extended
+    cell array ``(cz+1, cy+1, cx+1)`` reshaped to ``(n_ext_cells, K,
+    ...)``; ``same`` flags the self pairs (triangle masking).  Shapes are
+    static per layout; the dynamic part (which pairs survive a block) is
+    the ``sel`` vector produced by :func:`prune_local`.
+    """
+
+    layout: CellLayout
+    cell_a: np.ndarray    # (M,) int32
+    cell_b: np.ndarray    # (M,) int32
+    same: np.ndarray      # (M,) int32
+
+    @classmethod
+    def build(cls, layout: CellLayout) -> "PairSchedule":
+        for d in range(3):
+            if layout.global_cells[d] < 2:
+                raise ValueError(
+                    "pair schedules need >= 2 global cells per dim "
+                    f"(got {layout.global_cells}): with one global cell a "
+                    "halo cell aliases its own periodic image, which only "
+                    "the dense path's id mask handles")
+        from repro.core.md.forces import stencil_pairs
+        cz, cy, cx = layout.cells_per_domain
+        ez, ey, ex = cz + 1, cy + 1, cx + 1
+        base = np.stack(np.meshgrid(np.arange(cz), np.arange(cy),
+                                    np.arange(cx), indexing="ij"),
+                        axis=-1).reshape(-1, 3)
+
+        def flat(cells3):
+            return ((cells3[:, 0] * ey + cells3[:, 1]) * ex
+                    + cells3[:, 2]).astype(np.int32)
+
+        cell_a, cell_b, same = [], [], []
+        for a, b in stencil_pairs():
+            cell_a.append(flat(base + np.asarray(a)))
+            cell_b.append(flat(base + np.asarray(b)))
+            same.append(np.full(base.shape[0], int(a == b), np.int32))
+        return cls(layout=layout,
+                   cell_a=np.concatenate(cell_a),
+                   cell_b=np.concatenate(cell_b),
+                   same=np.concatenate(same))
+
+    @property
+    def n_pairs(self) -> int:
+        """Worklist length M = 14 * n_local_cells (the dense pair count)."""
+        return int(self.cell_a.shape[0])
+
+    @property
+    def n_ext_cells(self) -> int:
+        cz, cy, cx = self.layout.cells_per_domain
+        return (cz + 1) * (cy + 1) * (cx + 1)
+
+    def dense_slot_pairs(self) -> int:
+        """Slot pairs the dense engine evaluates per domain per step."""
+        return self.n_pairs * self.layout.capacity ** 2
+
+    def slot_pair_stats(self, n_exec: Optional[int] = None,
+                        k_exec: Optional[int] = None,
+                        n_keep: Optional[int] = None,
+                        max_occupancy: Optional[int] = None) -> dict:
+        """Evaluated-work accounting for one pruned block (per domain)."""
+        dense = self.dense_slot_pairs()
+        out = {
+            "n_pairs_dense": self.n_pairs,
+            "k_capacity": self.layout.capacity,
+            "dense_slot_pairs": dense,
+        }
+        if n_exec is None:
+            out.update({"evaluated_slot_pairs": dense, "prune_ratio": 1.0})
+            return out
+        evaluated = int(n_exec) * int(k_exec) ** 2
+        out.update({
+            "n_pairs_exec": int(n_exec),
+            "n_pairs_kept": None if n_keep is None else int(n_keep),
+            "k_exec": int(k_exec),
+            "max_occupancy": None if max_occupancy is None
+            else int(max_occupancy),
+            "evaluated_slot_pairs": evaluated,
+            "prune_ratio": dense / max(evaluated, 1),
+        })
+        return out
+
+
+def prune_radius(params: MDParams) -> float:
+    """Verlet-buffer analogue for the bounding-box prune.
+
+    Bounding boxes are sampled at rebin time and go stale as atoms drift
+    during the block, so the prune keeps every pair whose boxes come
+    within ``r_cut`` plus twice the expected per-block drift (3-sigma
+    thermal velocity over ``nstlist`` steps) — GROMACS' ``r_list``
+    buffer, sized for the same cadence.
+    """
+    drift = params.nstlist * params.dt * 3.0 * math.sqrt(
+        params.temperature / params.mass)
+    return params.ff.r_cut + 2.0 * drift
+
+
+# --------------------------------------------------------------------------
+# nstlist-cadence prune (device-local, off the hot path)
+# --------------------------------------------------------------------------
+
+def prune_local(sched: PairSchedule, ext_f: jnp.ndarray, ext_i: jnp.ndarray,
+                r_prune: float):
+    """Prune the static worklist for one block; runs inside shard_map.
+
+    ``ext_f`` / ``ext_i`` are the TRIMMED extended arrays (home + one halo
+    cell layer, the NB stencil's reach).  Returns ``(sel, n_keep,
+    max_occ)``: ``sel`` (M,) int32 holds the surviving worklist rows
+    packed first (original order preserved) with the sentinel ``M`` in
+    the padding tail; ``n_keep`` and ``max_occ`` are scalars the host
+    uses to choose the static exec shapes (see
+    :func:`repro.core.md.schedule_opt.bucket`).
+    """
+    M = sched.n_pairs
+    ne = sched.n_ext_cells
+    K = ext_f.shape[3]
+    counts = cell_counts(ext_i).reshape(ne)
+    lo, hi = cell_bounds(ext_f[..., :3], ext_i, big=_BIG)
+    lo, hi = lo.reshape(ne, 3), hi.reshape(ne, 3)
+
+    ca = jnp.asarray(sched.cell_a)
+    cb = jnp.asarray(sched.cell_b)
+    same = jnp.asarray(sched.same)
+    gap = jnp.maximum(0.0, jnp.maximum(lo[ca] - hi[cb], lo[cb] - hi[ca]))
+    d2 = jnp.sum(gap * gap, axis=-1)
+    occupied = (counts[ca] > 0) & (counts[cb] > 0)
+    keep = jnp.where(
+        same > 0,
+        counts[ca] >= 2,                           # self pair: >= 1 real pair
+        occupied & (d2 < jnp.asarray(r_prune ** 2, d2.dtype)))
+    n_keep = jnp.sum(keep).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True).astype(jnp.int32)
+    sel = jnp.where(jnp.arange(M) < n_keep, order, M).astype(jnp.int32)
+    max_occ = jnp.max(counts).astype(jnp.int32)
+    return sel, n_keep, max_occ
+
+
+# --------------------------------------------------------------------------
+# batched execution over the pruned worklist
+# --------------------------------------------------------------------------
+
+def _gather_batches(sched: PairSchedule, ext_f, ext_i, sel, k_exec: int):
+    """Pack the selected pairs into (N, K_exec, ...) A/B batches.
+
+    The sentinel worklist row ``M`` routes padding entries to an extra
+    all-empty cell at flat index ``n_ext_cells`` (types -1, coords 0), so
+    no masking branch is needed downstream — the kernels' validity masks
+    kill padding work and the scatter epilogue accumulates it into the
+    sliced-off sentinel row.
+    """
+    ne = sched.n_ext_cells
+    K = ext_f.shape[3]
+    k_exec = min(int(k_exec), K)
+    f2 = ext_f.reshape(ne, K, ext_f.shape[-1])[:, :k_exec]
+    id2 = ext_i[..., 0].reshape(ne, K)[:, :k_exec]
+    t2 = ext_i[..., 1].reshape(ne, K)[:, :k_exec]
+    typ = jnp.where(id2 >= 0, t2, -1).astype(jnp.int32)
+
+    f2p = jnp.concatenate([f2, jnp.zeros((1,) + f2.shape[1:], f2.dtype)])
+    tp = jnp.concatenate([typ, jnp.full((1, k_exec), -1, jnp.int32)])
+    ca = jnp.concatenate([jnp.asarray(sched.cell_a),
+                          jnp.asarray([ne], jnp.int32)])[sel]
+    cb = jnp.concatenate([jnp.asarray(sched.cell_b),
+                          jnp.asarray([ne], jnp.int32)])[sel]
+    same = jnp.concatenate([jnp.asarray(sched.same),
+                            jnp.asarray([0], jnp.int32)])[sel]
+    return (f2p[ca], f2p[cb], tp[ca], tp[cb], same, ca, cb)
+
+
+def _pair_forces_jnp(a, b, ta, tb, same, ff: ForceField):
+    """jnp twin of the Pallas cluster-pair kernel (one batch).
+
+    Same masks and math as ``kernels.nonbonded._pair_kernel``; the
+    optimization barriers pin the K-wide reductions exactly like the
+    dense path does (see forces.py), so sparse trajectories stay bitwise
+    stable across halo backends and pipeline modes.
+    """
+    kk = a.shape[1]
+    dtype = a.dtype
+    pos_a, q_a = a[..., :3], a[..., 3]
+    pos_b, q_b = b[..., :3], b[..., 3]
+    dx = pos_a[:, :, None, :] - pos_b[:, None, :, :]
+    r2 = jnp.sum(dx * dx, axis=-1)
+    mask = (ta >= 0)[:, :, None] & (tb >= 0)[:, None, :]
+    mask &= r2 < jnp.asarray(ff.r_cut ** 2, dtype)
+    tri = jnp.triu(jnp.ones((kk, kk), jnp.bool_), k=1)[None]
+    mask &= jnp.where(same[:, None, None] > 0, tri,
+                      jnp.ones((1, kk, kk), jnp.bool_))
+
+    eps_t = jnp.asarray(ff.eps, dtype)
+    sig_t = jnp.asarray(ff.sigma, dtype)
+    tai = jnp.clip(ta, 0, eps_t.shape[0] - 1)
+    tbi = jnp.clip(tb, 0, eps_t.shape[0] - 1)
+    eps = eps_t[tai[:, :, None], tbi[:, None, :]]
+    sig = sig_t[tai[:, :, None], tbi[:, None, :]]
+    fac, pe = pair_terms(dx, r2, q_a[:, :, None], q_b[:, None, :],
+                         eps, sig, ff, mask)
+    fvec = lax.optimization_barrier(fac[..., None] * dx)
+    fa = lax.optimization_barrier(jnp.sum(fvec, axis=2))
+    fb = lax.optimization_barrier(-jnp.sum(fvec, axis=1))
+    return fa, fb, jnp.sum(pe, axis=(1, 2))
+
+
+# pallas kernel availability is probed once and latched, mirroring
+# HaloPlan._pallas_broken (the jnp twin is the oracle fallback)
+_PALLAS_BROKEN = [False]
+
+
+def pallas_fallback_active() -> bool:
+    """True once the Pallas NB kernel has failed and the ``"pallas"``
+    backend is executing the jnp twin (surfaced via engine pair_stats)."""
+    return _PALLAS_BROKEN[0]
+
+
+def _latch_pallas_fallback(e: Exception, context: str) -> None:
+    """Latch the process-global jnp fallback and say so once, loudly."""
+    import warnings
+    _PALLAS_BROKEN[0] = True
+    warnings.warn(
+        f"Pallas NB kernel {context} ({type(e).__name__}: {e}); the "
+        "'pallas' force backend falls back to the jnp pair evaluator "
+        "for the rest of this process", RuntimeWarning, stacklevel=3)
+
+
+def probe_pallas(ff: ForceField, interpret: bool = True) -> bool:
+    """Eagerly compile+run the NB kernel on a tiny batch; latch fallback.
+
+    The try/except inside :func:`_eval_schedule` only sees *trace-time*
+    failures — on a real backend (``interpret=False``) Mosaic lowering
+    errors surface at jit-compile time, outside that guard.  Engines
+    selecting the ``"pallas"`` backend run this probe once at build time
+    so compile-time kernel failures also downgrade to the documented jnp
+    fallback instead of crashing the first block program.
+    """
+    if _PALLAS_BROKEN[0]:
+        return False
+    try:
+        from repro.kernels import nonbonded
+        z4 = jnp.zeros((8, 4, 4), jnp.float32)
+        t4 = jnp.full((8, 4), -1, jnp.int32)
+        c4 = jnp.zeros((8,), jnp.int32)
+        F, pe = nonbonded.pair_forces_accum(
+            z4, z4, t4, t4, c4, c4, c4, ff, 2, interpret=interpret)
+        F.block_until_ready()
+        return True
+    except Exception as e:  # pragma: no cover - backend-specific
+        _latch_pallas_fallback(e, "failed its build-time probe")
+        return False
+
+
+def _eval_schedule(ext_f, ext_i, layout: CellLayout, ff: ForceField, *,
+                   sched: PairSchedule, sel, k_exec: int,
+                   use_pallas: bool, interpret: bool = True):
+    """Evaluate the pruned worklist: gather -> pair kernel -> scatter-add.
+
+    Returns ``(F_ext, pe)`` in the same layout as ``compute_forces`` (the
+    trimmed extended force array with halo partial sums).
+    """
+    ne = sched.n_ext_cells
+    K = ext_f.shape[3]
+    k_exec = min(int(k_exec), K)
+    a, b, ta, tb, same, ca, cb = _gather_batches(sched, ext_f, ext_i, sel,
+                                                 k_exec)
+    F = pe_pairs = None
+    if use_pallas and not _PALLAS_BROKEN[0]:
+        try:
+            from repro.kernels import nonbonded
+            # the kernel + its scatter-accumulate epilogue; the sentinel
+            # row ne absorbs padding entries and is sliced off below
+            F, pe_pairs = nonbonded.pair_forces_accum(
+                a, b, ta, tb, same, ca, cb, ff, ne + 1,
+                interpret=interpret)
+        except Exception as e:  # pragma: no cover - backend-specific
+            _latch_pallas_fallback(e, "unavailable at trace time")
+    if F is None:
+        fa, fb, pe_pairs = _pair_forces_jnp(a, b, ta, tb, same, ff)
+        F = jnp.zeros((ne + 1, k_exec, 3), ext_f.dtype)
+        F = F.at[ca].add(fa)
+        F = F.at[cb].add(fb)
+    F = lax.optimization_barrier(F[:ne])
+    Fk = jnp.zeros((ne, K, 3), ext_f.dtype).at[:, :k_exec].set(F)
+    F_ext = Fk.reshape(ext_f.shape[:3] + (K, 3))
+    return F_ext, jnp.sum(pe_pairs)
+
+
+# --------------------------------------------------------------------------
+# force-backend registry
+# --------------------------------------------------------------------------
+
+def _dense(ext_f, ext_i, layout, ff, **_):
+    """The unchanged 14-zone loop: the bitwise trajectory reference."""
+    return compute_forces(ext_f, ext_i, layout, ff)
+
+
+def _sparse(ext_f, ext_i, layout, ff, *, sched, sel, k_exec,
+            interpret=True):
+    return _eval_schedule(ext_f, ext_i, layout, ff, sched=sched, sel=sel,
+                          k_exec=k_exec, use_pallas=False,
+                          interpret=interpret)
+
+
+def _pallas(ext_f, ext_i, layout, ff, *, sched, sel, k_exec,
+            interpret=True):
+    return _eval_schedule(ext_f, ext_i, layout, ff, sched=sched, sel=sel,
+                          k_exec=k_exec, use_pallas=True,
+                          interpret=interpret)
+
+
+ForceBackend = Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
+_FORCE_BACKENDS: Dict[str, ForceBackend] = {}
+
+
+def register_force_backend(name: str, fn: ForceBackend) -> None:
+    """Register a force engine under ``name`` (the config axis value)."""
+    _FORCE_BACKENDS[name] = fn
+
+
+def force_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_FORCE_BACKENDS))
+
+
+def get_force_backend(name: str) -> ForceBackend:
+    try:
+        return _FORCE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown force backend {name!r}; "
+            f"available: {force_backends()}") from None
+
+
+register_force_backend("dense", _dense)
+register_force_backend("sparse", _sparse)
+register_force_backend("pallas", _pallas)

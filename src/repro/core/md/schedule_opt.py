@@ -3,14 +3,36 @@
 The paper moves the pair-list prune kernel to a low-priority stream and adds
 a medium-priority stream for reduction/update so pruning cannot block the
 next step's critical path.  Under XLA there are no user-visible streams:
-the equivalent lever is *program partitioning* — we keep the rebin/migration
-("prune") work in a SEPARATE jitted program executed every ``nstlist``
+the equivalent lever is *program partitioning* — the rebin/migration
+("prune") work runs as SEPARATE jitted programs executed every ``nstlist``
 blocks, so the hot per-step program contains only force/halo/integration
 work and XLA's latency-hiding scheduler never interleaves prune work into
-the step's critical path.  That structural choice lives in
-``MDEngine._build_programs``; this module documents it and provides the
-hook point used by the engine so the design intent is greppable.
+the step's critical path.  Two programs live at that cadence:
+
+* ``MDEngine.rebin_fn`` — migration + re-binning (GROMACS' DD/NS step);
+* ``MDEngine.prune_fn`` — the pair-schedule prune
+  (:func:`repro.core.md.pair_schedule.prune_local`): occupancy counts and
+  cell bounding boxes re-derive the surviving cell-pair worklist, whose
+  packed prefix the next block's force programs execute.
+
+The prune emits *dynamic* sizes (surviving pairs, max cell occupancy) that
+must become *static* exec shapes for the jitted block program.  ``bucket``
+below quantizes them so a whole run compiles only a handful of distinct
+block programs while keeping the evaluated-work accounting honest (no
+power-of-two overshoot).
 """
+
+
+def bucket(n: int, quantum: int, cap: int) -> int:
+    """Round ``n`` up to a multiple of ``quantum``, clamped to [quantum, cap].
+
+    Used by the engine to turn prune-reported dynamic sizes into stable
+    static shapes: occupancy drifts by a few atoms between blocks, but the
+    bucketed shape — hence the compiled program — stays put.
+    """
+    n = max(int(n), 1)
+    b = -(-n // quantum) * quantum
+    return int(min(max(b, quantum), cap))
 
 
 def noop() -> None:

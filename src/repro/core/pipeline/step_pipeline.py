@@ -60,6 +60,14 @@ class StepFns:
 
     Metric keys must be unique across ``force`` and ``finish`` (the
     pipeline merges them into one per-step dict).
+
+    ``ctx`` is the *block-constant* context: it is passed through every
+    callback unchanged for the whole multi-step program, so anything in
+    it (pre-exchanged index arrays, the MD engine's pruned pair schedule
+    — ``pair_sel`` / ``k_exec`` from
+    :mod:`repro.core.md.pair_schedule`) is hoisted out of the scan and
+    shared by BOTH pipeline modes; per-mode drift in block-level inputs
+    would break the bitwise off/double_buffer equivalence.
     """
 
     begin: Callable[[Any, jnp.ndarray, Any], Tuple[Any, Any, jnp.ndarray]]

@@ -111,3 +111,82 @@ def pair_forces(a, b, ta, tb, same, ff: ForceField, block: int = 8,
                    jax.ShapeDtypeStruct((N,), a.dtype)],
         interpret=interpret,
     )(a, b, ta, tb, same, eps_t, sig_t)
+
+
+# --------------------------------------------------------------------------
+# scatter-accumulate epilogue: batched pair forces -> extended force array
+# --------------------------------------------------------------------------
+
+def _scatter_accum_kernel(ia_ref, ib_ref, fa_ref, fb_ref, out_ref, *,
+                          chunk: int):
+    """Grid step c accumulates chunk c's per-pair forces into their cells.
+
+    Cell indices REPEAT across pairs (every base cell anchors 14 stencil
+    pairs), so rows are added one pair at a time inside the chunk — the
+    TPU grid is sequential, which makes the accumulation deterministic
+    (the analogue of GROMACS' per-cluster force reduction order).
+    """
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(i, _):
+        row = c * chunk + i
+        ia = ia_ref[row]
+        ib = ib_ref[row]
+        out_ref[ia, :, :] = out_ref[ia, :, :] + fa_ref[row, :, :]
+        out_ref[ib, :, :] = out_ref[ib, :, :] + fb_ref[row, :, :]
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+def scatter_accum(cell_a, cell_b, fa, fb, n_cells: int, chunk: int = 8,
+                  interpret: bool = True):
+    """Pallas epilogue: sum (N, K, 3) pair forces into (n_cells, K, 3).
+
+    ``cell_a`` / ``cell_b`` are per-pair flat cell indices in
+    ``[0, n_cells)`` (padding pairs must point at a sentinel row the
+    caller slices off).  Duplicate indices accumulate.
+    """
+    N, K, _ = fa.shape
+    if N == 0:
+        return jnp.zeros((n_cells, K, 3), fa.dtype)
+    chunk = min(chunk, N)
+    while N % chunk:
+        chunk -= 1
+    return pl.pallas_call(
+        functools.partial(_scatter_accum_kernel, chunk=chunk),
+        grid=(N // chunk,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_cells, K, 3), fa.dtype),
+        interpret=interpret,
+    )(cell_a, cell_b, fa, fb)
+
+
+def pair_forces_accum(a, b, ta, tb, same, cell_a, cell_b, ff: ForceField,
+                      n_cells: int, block: int = 8, interpret: bool = True,
+                      epilogue: str = "xla"):
+    """``pair_forces`` extended with the scatter-accumulate epilogue.
+
+    Computes one batch of cell-pair forces and accumulates both sides
+    into a fresh ``(n_cells, K, 3)`` extended force array (plus the
+    per-pair energies).  ``epilogue="pallas"`` drives the sequential
+    :func:`scatter_accum` kernel — the TPU-native shape of the fused
+    NB-force + reduction stage; ``"xla"`` lowers the same accumulation
+    as an XLA scatter-add (duplicate-safe, and the faster choice under
+    interpret mode on CPU).  Both orders are fixed per compilation.
+    """
+    fa, fb, pe = pair_forces(a, b, ta, tb, same, ff, block=block,
+                             interpret=interpret)
+    if epilogue == "pallas":
+        F = scatter_accum(cell_a, cell_b, fa, fb, n_cells,
+                          interpret=interpret)
+    else:
+        F = jnp.zeros((n_cells, fa.shape[1], 3), fa.dtype)
+        F = F.at[cell_a].add(fa)
+        F = F.at[cell_b].add(fb)
+    return F, pe

@@ -16,6 +16,9 @@ For each cell this:
 Usage:
   python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
   python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+  python -m repro.launch.dryrun --halo                 # HaloPlan cells
+  python -m repro.launch.dryrun --md --force-backend sparse
+                                  # MD force-engine cells (prune ratio)
   python -m repro.launch.dryrun --summarize   # markdown table from JSONs
 """
 import argparse
@@ -290,6 +293,78 @@ def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
                   f"({rec['wall_s']}s)", flush=True)
 
 
+# ---- MD force-engine cells (pair-schedule backends on a live DD mesh) --------
+
+def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
+                n_atoms: int = 800, steps: int = 6, dd=(2, 2, 2),
+                pipeline: str = "off", verbose: bool = True):
+    """Run a short DD simulation and record the chosen force backend, its
+    prune ratio / evaluated-work accounting, and the occupancy-adjusted
+    halo byte accounting (``bytes_index`` / ``useful_bytes``)."""
+    from repro.core.halo_plan import HaloSpec
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+
+    t0 = time.time()
+    dd_name = f"{sum(1 for d in dd if d > 1)}d"
+    record = {"kind": "mdforce", "dd": dd_name, "backend": halo_backend,
+              "force_backend": force_backend, "pipeline": pipeline,
+              "n_atoms": n_atoms, "ok": False}
+    try:
+        mesh = make_mesh(dd, ("z", "y", "x"))
+        system = make_grappa_like(n_atoms, seed=1)
+        spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                        backend=halo_backend)
+        eng = MDEngine(system, mesh, spec, pipeline=pipeline,
+                       force_backend=force_backend)
+        _, metrics, diags = eng.simulate(steps)
+        record.update({
+            "ok": True,
+            "devices": int(np.prod(dd)),
+            "pair_stats": eng.pair_stats(),
+            "halo_stats": {k: v for k, v in eng.halo_stats().items()
+                           if k in ("total_bytes", "bytes_index",
+                                    "useful_bytes", "occupancy")},
+            "pe_final": float(np.asarray(metrics["pe"])[-1]),
+            "n_atoms_conserved": int(np.asarray(diags[-1]["n_atoms"]))
+            == n_atoms,
+        })
+        if verbose:
+            ps = record["pair_stats"]
+            print(f"  force_backend={force_backend} "
+                  f"prune_ratio={ps['prune_ratio']:.2f}x "
+                  f"evaluated={ps['evaluated_slot_pairs']} "
+                  f"(dense {ps['dense_slot_pairs']})")
+    except Exception as e:  # noqa: BLE001
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(record["traceback"])
+    finally:
+        record["wall_s"] = round(time.time() - t0, 1)
+        jax.clear_caches()
+    return record
+
+
+def run_md_cells(force_backend: str, force: bool = False,
+                 halo_backend: str = "fused", pipeline: str = "off"):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    name = f"mdforce__3d__{halo_backend}__{force_backend}"
+    if pipeline != "off":
+        name += f"__{pipeline}"
+    path = RESULTS / f"{name}.json"
+    if path.exists() and not force:
+        print(f"[skip] {path.name} exists")
+        return
+    print(f"[mdforce] 3d x {halo_backend} x force={force_backend} "
+          f"pipeline={pipeline}", flush=True)
+    rec = run_md_cell(force_backend=force_backend,
+                      halo_backend=halo_backend, pipeline=pipeline)
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
+          f"({rec['wall_s']}s)", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -302,6 +377,12 @@ def main():
     ap.add_argument("--summarize", action="store_true")
     ap.add_argument("--halo", action="store_true",
                     help="compile HaloPlan cells (results/dryrun/halo__*)")
+    ap.add_argument("--md", action="store_true",
+                    help="run MD force-engine cells "
+                         "(results/dryrun/mdforce__*)")
+    ap.add_argument("--force-backend", default="dense",
+                    help="NB force engine for --md cells "
+                         "(dense|sparse|pallas)")
     ap.add_argument("--halo-width", type=int, default=1,
                     help="halo width per decomposed dim for --halo cells")
     ap.add_argument("--halo-pulses", type=int, default=1,
@@ -324,6 +405,10 @@ def main():
     if args.halo:
         run_halo_cells(force=args.force, width=args.halo_width,
                        pulses=args.halo_pulses, pipeline=args.pipeline)
+        return
+    if args.md:
+        run_md_cells(force_backend=args.force_backend, force=args.force,
+                     pipeline=args.pipeline)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

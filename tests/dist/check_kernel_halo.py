@@ -1,8 +1,11 @@
-"""4-virtual-device check: the Pallas halo kernels against jnp oracles.
+"""4-virtual-device check: the Pallas halo + NB kernels against jnp oracles.
 
 Drives ``put_signal`` (both ring directions) and ``fused_pulses``
 (independent + staged-dependent index maps, padding entries) inside a
-shard_map and compares against ppermute oracles bit for bit.
+shard_map and compares against ppermute oracles bit for bit; plus the NB
+cluster-pair kernel with its scatter-accumulate epilogue
+(``pair_forces_accum``) against a sequential numpy oracle, per device
+inside the same shard_map.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python tests/dist/check_kernel_halo.py
@@ -17,7 +20,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map_norep
-from repro.kernels import halo_pack
+from repro.core.md.system import DEFAULT_FF
+from repro.kernels import halo_pack, nonbonded
 from repro.launch.mesh import make_mesh
 
 RING = 4
@@ -93,6 +97,46 @@ def main():
     ref_add[np.asarray(pidx)] += np.asarray(rows)
     np.testing.assert_allclose(np.asarray(added), ref_add, atol=0)
     print("pack/unpack_add: exact gather / scatter-add")
+
+    # ---- NB pair kernel + scatter-accumulate epilogue vs oracle -------
+    # each device runs the kernel on its own batch (sharded over z); the
+    # pallas epilogue must match a strictly sequential accumulation
+    n_pair, k, n_cells = 8, 8, 6
+    a = rng.uniform(0, 2.5, (RING * n_pair, k, 4)).astype(np.float32)
+    b = rng.uniform(0, 2.5, (RING * n_pair, k, 4)).astype(np.float32)
+    ta = rng.randint(-1, 2, (RING * n_pair, k)).astype(np.int32)
+    tb = rng.randint(-1, 2, (RING * n_pair, k)).astype(np.int32)
+    same = np.zeros(RING * n_pair, np.int32)
+    same[::4] = 1
+    b[same > 0] = a[same > 0]
+    tb[same > 0] = ta[same > 0]
+    ca = rng.randint(0, n_cells, RING * n_pair).astype(np.int32)
+    cb = rng.randint(0, n_cells, RING * n_pair).astype(np.int32)
+
+    def nb_body(a, b, ta, tb, same, ca, cb):
+        F, pe = nonbonded.pair_forces_accum(a, b, ta, tb, same, ca, cb,
+                                            DEFAULT_FF, n_cells,
+                                            epilogue="pallas")
+        return F, pe
+
+    fn = shard_map_norep(nb_body, mesh=mesh, in_specs=(P("z"),) * 7,
+                         out_specs=(P("z"), P("z")))
+    F_got, pe_got = jax.jit(fn)(*map(jnp.asarray,
+                                     (a, b, ta, tb, same, ca, cb)))
+    F_got = np.asarray(F_got).reshape(RING, n_cells, k, 3)
+
+    fa, fb, pe_ref = nonbonded.pair_forces(
+        *map(jnp.asarray, (a, b, ta, tb, same)), DEFAULT_FF)
+    fa, fb = np.asarray(fa), np.asarray(fb)
+    F_ref = np.zeros((RING, n_cells, k, 3), np.float32)
+    for i in range(RING * n_pair):
+        F_ref[i // n_pair, ca[i]] += fa[i]
+        F_ref[i // n_pair, cb[i]] += fb[i]
+    assert np.array_equal(F_got, F_ref), "pair_forces_accum vs oracle"
+    assert np.array_equal(np.asarray(pe_got).reshape(-1),
+                          np.asarray(pe_ref)), "pair energies"
+    print("pair_forces_accum: scatter epilogue bitwise == sequential "
+          "oracle (4 device batches)")
 
     print("check_kernel_halo OK")
 

@@ -21,10 +21,12 @@ from repro.launch.mesh import make_mesh
 AXES = ("z", "y", "x")
 
 
-def run(system, mesh, backend, pipeline, n_steps, pulses=None, widths=None):
+def run(system, mesh, backend, pipeline, n_steps, pulses=None, widths=None,
+        force_backend="dense"):
     spec = HaloSpec(axis_names=AXES, widths=widths or (1, 1, 1),
                     backend=backend, pulses=pulses)
-    eng = MDEngine(system, mesh, spec, pipeline=pipeline)
+    eng = MDEngine(system, mesh, spec, pipeline=pipeline,
+                   force_backend=force_backend)
     (cf, ci), metrics, diags = eng.simulate(n_steps)
     return (np.asarray(jax.device_get(cf)), np.asarray(jax.device_get(ci)),
             {k: np.asarray(v) for k, v in metrics.items()}, diags, eng)
@@ -79,6 +81,44 @@ def main():
     assert rel.max() < 1e-4, rel.max()
     print("DD potential energies match single-device within",
           f"{rel.max():.1e}")
+
+    # --- pruned force backends: tolerance vs the dense trajectory ------
+    # (documented guarantee: same per-pair math, different summation
+    # order -> NOT bitwise; positions/velocities agree to float32
+    # round-off accumulated over 24 steps, energies tighter)
+    pos_ref, vel_ref = eng_ref.gather_by_id(
+        [cf_ref[..., 0:3], cf_ref[..., 4:7]], ci_ref)
+    for fb in ("sparse", "pallas"):
+        cf, ci, m, _, eng = run(system, mesh, "serialized", "off", n_steps,
+                                force_backend=fb)
+        pos, vel = eng.gather_by_id([cf[..., 0:3], cf[..., 4:7]], ci)
+        dpos = np.abs(pos - pos_ref).max()
+        dvel = np.abs(vel - vel_ref).max()
+        assert dpos < 1e-3 and dvel < 1e-2, (fb, dpos, dvel)
+        rel_pe = np.abs(m["pe"] - m_ref["pe"]).max() / \
+            np.abs(m_ref["pe"]).max()
+        assert rel_pe < 1e-5, (fb, rel_pe)
+        ratio = eng.pair_stats()["prune_ratio"]
+        assert ratio >= 2.0, (fb, ratio)
+        assert not eng.pair_stats().get("pallas_fallback"), \
+            "pallas backend silently downgraded to the jnp twin"
+        print(f"force_backend={fb}: 24-step trajectory within tolerance "
+              f"(dpos {dpos:.1e}, dpe {rel_pe:.1e}), "
+              f"prune ratio {ratio:.2f}x")
+
+    # --- pruned backend under the step pipeline: schedule threading ----
+    # sparse/off and sparse/double_buffer must stay bitwise-identical to
+    # EACH OTHER (the block-constant schedule rides the StepFns ctx, so
+    # the pipeline invariant holds per force backend)
+    cf_a, ci_a, m_a, _, _ = run(system, mesh, "signal", "off", n_steps,
+                                force_backend="sparse")
+    cf_b, ci_b, m_b, _, _ = run(system, mesh, "signal", "double_buffer",
+                                n_steps, force_backend="sparse")
+    assert np.array_equal(cf_a, cf_b) and np.array_equal(ci_a, ci_b), \
+        "sparse off vs double_buffer trajectories differ"
+    for k in m_a:
+        assert np.array_equal(m_a[k], m_b[k]), k
+    print("sparse/off == sparse/double_buffer bitwise (signal backend)")
 
     print("check_md OK")
 

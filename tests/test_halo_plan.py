@@ -154,6 +154,43 @@ def test_plan_stats_canonical_keys(mesh1d):
     assert plan.stats((6,)) is stats
 
 
+def test_plan_stats_index_and_useful_bytes(mesh1d):
+    """The (K, 2)-style int32 index exchange and occupancy-adjusted
+    useful bytes are reported alongside (never inside) the canonical
+    float payload accounting."""
+    plan = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float32",
+                 feature_elems=4)
+    stats = plan.stats((6,))
+    assert stats["bytes_index"] == 0 and stats["useful_bytes"] is None
+    k = 8                                 # capacity: feature_elems = 4 * K
+    plan2 = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float32",
+                  feature_elems=4 * k)
+    s = plan2.stats((6,), index_elems=2 * k, index_itemsize=4,
+                    occupancy=0.45)
+    cells = s["total_bytes"] // (4 * k * 4)
+    assert s["bytes_index"] == cells * 2 * k * 4
+    assert s["useful_bytes"] == round(s["total_bytes"] * 0.45)
+    assert s["occupancy"] == 0.45
+    # total_bytes itself is unchanged by the side-channel accounting
+    assert s["total_bytes"] == plan2.stats((6,))["total_bytes"]
+
+
+def test_engine_halo_stats_accounts_cell_i_exchange():
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+
+    eng = MDEngine(make_grappa_like(300, seed=11),
+                   make_mesh((1, 1, 1), ("z", "y", "x")))
+    s = eng.halo_stats()
+    K = eng.layout.capacity
+    cells = s["total_bytes"] // (4 * K * 4)
+    assert s["bytes_index"] == cells * 2 * K * 4      # (K, 2) int32
+    gz, gy, gx = eng.layout.global_cells
+    occ = eng.system.n_atoms / (gz * gy * gx * K)
+    assert abs(s["occupancy"] - occ) < 1e-12
+    assert s["useful_bytes"] == round(s["total_bytes"] * occ)
+
+
 def test_legacy_exchange_stats_shim_warns():
     from repro.core.halo import exchange_stats
     from repro.core.schedule import make_schedule
