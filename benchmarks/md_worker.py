@@ -3,16 +3,18 @@
 Usage (positional args kept for benchmarks/figures.py compatibility):
 
   python -m benchmarks.md_worker BACKEND N_ATOMS [STEPS]
-      [--pipeline {off,double_buffer}] [--halo-width N]
+      [--pipeline {off,double_buffer}] [--pipeline-depth D]
+      [--overlap-rebin] [--halo-width N]
       [--halo-pulses N] [--force-backend {dense,sparse,pallas}]
       [--safety F] [--out results/dryrun]
 
 Emits one JSON record with per-step timing plus the plan's overlap model
-(``overlapped_bytes``, ``exposed_phases``), the alpha-beta latency model
-(``modeled_*``, for the modeled-vs-measured figures), and the force
-engine's evaluated-work accounting (``prune_ratio``, ``pairs_per_s``);
-with ``--out`` the record is also written to
-``<out>/md__<backend>__<n>__<pipeline>[__wW][__pP][__fbB][__sS].json``.
+(``overlapped_bytes``, ``exposed_phases`` at the chosen window depth),
+the alpha-beta latency model (``modeled_*``, for the modeled-vs-measured
+figures), and the force engine's evaluated-work accounting
+(``prune_ratio``, ``pairs_per_s``); with ``--out`` the record is also
+written to ``<out>/md__<backend>__<n>__<pipeline>[__dD][__or][__wW]
+[__pP][__fbB][__sS].json``.
 """
 import argparse
 import json
@@ -33,6 +35,12 @@ def main():
     ap.add_argument("steps", type=int, nargs="?", default=40)
     ap.add_argument("--pipeline", default="off",
                     choices=("off", "double_buffer"))
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight window depth (extended-force ring "
+                         "slots; 2 = double-buffered halos)")
+    ap.add_argument("--overlap-rebin", action="store_true",
+                    help="fuse rebin/migration + prune into the block "
+                         "program's final region (GROMACS DLB analogue)")
     ap.add_argument("--halo-width", type=int, default=1)
     ap.add_argument("--halo-pulses", type=int, default=1)
     ap.add_argument("--force-backend", default="dense",
@@ -53,6 +61,8 @@ def main():
                     pulses=None if args.halo_pulses == 1
                     else (args.halo_pulses,) * 3)
     eng = MDEngine(system, mesh, spec, pipeline=args.pipeline,
+                   pipeline_depth=args.pipeline_depth,
+                   overlap_rebin=args.overlap_rebin,
                    force_backend=args.force_backend,
                    capacity_safety=args.safety)
 
@@ -79,6 +89,8 @@ def main():
         "devices": n_dev,
         "mode": args.backend,
         "pipeline": args.pipeline,
+        "pipeline_depth": args.pipeline_depth,
+        "overlap_rebin": args.overlap_rebin,
         "halo_width": w,
         "halo_pulses": args.halo_pulses,
         "n_atoms": args.n_atoms,
@@ -114,6 +126,10 @@ def main():
         out_dir = Path(args.out)
         out_dir.mkdir(parents=True, exist_ok=True)
         name = f"md__{args.backend}__{args.n_atoms}__{args.pipeline}"
+        if args.pipeline_depth != 2:
+            name += f"__d{args.pipeline_depth}"
+        if args.overlap_rebin:
+            name += "__or"
         if w != 1:
             name += f"__w{w}"
         if args.halo_pulses != 1:

@@ -106,18 +106,20 @@ def halo_table():
     with the compiled-HLO collective bytes as a cross-check column.
     The latency columns are the alpha-beta model (per-message link
     latency + bytes/bandwidth); exposed/ovl are the step-pipeline
-    overlap model (cells run with ``--pipeline double_buffer`` overlap
-    the reverse exchange).  Old-format records show '-'.
+    overlap model at the recorded window depth (cells run with
+    ``--pipeline double_buffer`` overlap the reverse exchange; a
+    ``--pipeline-depth`` sweep shows the exposed phases amortizing as
+    the in-flight window deepens).  Old-format records show '-'.
     """
-    print("\n| dd | backend | w | pulses | pipe | total B | chained B | "
-          "dep frac | ser t (us) | fused t (us) | exposed/step | ovl B | "
-          "HLO coll B/dev |")
-    print("|" + "---|" * 13)
+    print("\n| dd | backend | w | pulses | pipe | depth | total B | "
+          "chained B | dep frac | ser t (us) | fused t (us) | "
+          "exposed/step | ovl B | HLO coll B/dev |")
+    print("|" + "---|" * 14)
     for p in sorted(DRY.glob("halo__*.json")):
         r = json.loads(p.read_text())
         if not r.get("ok"):
             print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | FAIL "
-                  f"{r.get('error', '')[:40]} |" + " |" * 10)
+                  f"{r.get('error', '')[:40]} |" + " |" * 11)
             continue
         st = r["plan_stats"]
         chained = (st["serialized_critical_bytes"]
@@ -129,10 +131,15 @@ def halo_table():
         ser_us = f"{lat['serialized_time_s'] * 1e6:.2f}" if lat else "-"
         fus_us = f"{lat['fused_time_s'] * 1e6:.2f}" if lat else "-"
         exposed = ovl["exposed_phases_per_step"] if ovl else "-"
+        if isinstance(exposed, float):
+            exposed = f"{exposed:g}"
         ovl_b = ovl["overlapped_bytes_per_step"] if ovl else "-"
+        depth = r.get("pipeline_depth") or (ovl or {}).get("depth") or "-"
+        if r.get("pipeline", "off") == "off":
+            depth = "-"
         print(f"| {r['dd']} | {r['backend']} | {r.get('width', 1)} | "
               f"{r.get('pulses', 1)} | {r.get('pipeline', 'off')} | "
-              f"{st['total_bytes']} | {chained} | "
+              f"{depth} | {st['total_bytes']} | {chained} | "
               f"{st['dependent_fraction']:.4f} | {ser_us} | {fus_us} | "
               f"{exposed} | {ovl_b} | {coll:.3e} |")
 
@@ -177,19 +184,24 @@ def force_table():
     files = sorted(DRY.glob("mdforce__*.json"))
     if not files:
         return
-    print("\n| dd | halo backend | force backend | prune ratio | "
-          "slot pairs/step | occupancy | index B | useful B |")
-    print("|" + "---|" * 8)
+    print("\n| dd | halo backend | force backend | pipe | depth | "
+          "ovl rebin | prune ratio | slot pairs/step | occupancy | "
+          "index B | useful B |")
+    print("|" + "---|" * 11)
     for p in files:
         r = json.loads(p.read_text())
         if not r.get("ok"):
             print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | "
                   f"{r.get('force_backend', '?')} | FAIL "
-                  f"{r.get('error', '')[:40]} |" + " |" * 4)
+                  f"{r.get('error', '')[:40]} |" + " |" * 7)
             continue
         ps = r["pair_stats"]
         hs = r["halo_stats"]
+        pipe = r.get("pipeline", "off")
+        depth = r.get("pipeline_depth", "-") if pipe != "off" else "-"
+        ovr = "yes" if r.get("overlap_rebin") else "no"
         print(f"| {r['dd']} | {r['backend']} | {r['force_backend']} | "
+              f"{pipe} | {depth} | {ovr} | "
               f"{ps['prune_ratio']:.2f}x | "
               f"{ps['evaluated_slot_pairs']} | "
               f"{hs['occupancy']:.3f} | {hs['bytes_index']} | "

@@ -417,16 +417,29 @@ def latency_model(stats: dict,
 
 
 def overlap_model(stats: dict, critical_path: str,
-                  pipeline: str = "off") -> dict:
+                  pipeline: str = "off", depth: int = 2) -> dict:
     """Per-step exposed-vs-overlapped communication under a step pipeline.
 
     ``exposed_phases_per_step`` counts the communication stages left on a
     step's critical path (per the backend's ``critical_path`` model: pulses
     when serialized, phases when fused), for both exchange directions.
     ``pipeline="double_buffer"`` overlaps the whole force-return exchange
-    of step ``N`` with step ``N+1``'s forward half, so only the forward
-    stages stay exposed and the reverse bytes count as overlapped (the
-    drain of the final step is amortized over the block).
+    of step ``N`` with step ``N+1``'s forward half, so the reverse bytes
+    count as overlapped (the drain of the final step is amortized over
+    the block).  A ``depth``-deep window (ring of ``depth`` extended-force
+    slots, ``depth - 1`` steps resident per fused program region) further
+    amortizes the *forward* stages: the coordinate sends of an in-window
+    step overlap the force compute of up to ``depth - 2`` older resident
+    steps, leaving ``1 / (depth - 1)`` of the forward stages exposed per
+    step — monotone decreasing in ``depth``, the paper's deeper-overlap
+    limit where only one exchange per window stays on the critical path.
+
+    Like the alpha-beta :func:`latency_model`, this is an *analytic*
+    model of what signal-coordinated hardware can hide, not a property
+    of the emulated schedule: the CPU pipeline pins each step with
+    barriers to guarantee bitwise conformance, so the depth axis is
+    measurable here but its predicted win must be validated on a real
+    mesh (see the ROADMAP open item).
     """
     if critical_path == "serialized":
         stages = len([b for b in stats["serialized_pulse_bytes"] if b > 0])
@@ -434,15 +447,22 @@ def overlap_model(stats: dict, critical_path: str,
         stages = len([p for p in stats["fused_phases"]
                       if p["phase_bytes"] > 0])
     if pipeline == "double_buffer":
-        exposed = stages                       # forward only
-        overlapped_bytes = stats["total_bytes"]  # the reverse exchange
-        overlapped_stages = stages
+        if depth < 2:
+            raise ValueError("double_buffer overlap model needs depth >= 2")
+        window = depth - 1                     # steps in flight per region
+        exposed = stages / window              # exposed forward fraction
+        overlapped_stages = 2 * stages - exposed
+        # the whole reverse exchange plus the hidden forward fraction
+        overlapped_bytes = int(round(
+            stats["total_bytes"] * (2 - 1 / window)))
     else:
+        depth = 1
         exposed = 2 * stages                   # forward + reverse chained
         overlapped_bytes = 0
         overlapped_stages = 0
     return {
         "pipeline": pipeline,
+        "depth": depth,
         "exposed_phases_per_step": exposed,
         "overlapped_phases_per_step": overlapped_stages,
         "overlapped_bytes_per_step": overlapped_bytes,
@@ -516,7 +536,7 @@ class HaloPlan:
     def stats(self, local_shape: Sequence[int],
               itemsize: Optional[int] = None,
               feature_elems: Optional[int] = None,
-              pipeline: str = "off",
+              pipeline: str = "off", depth: int = 2,
               link_latency_s: float = DEFAULT_LINK_LATENCY_S,
               bandwidth_Bps: float = DEFAULT_BANDWIDTH_BPS,
               index_elems: int = 0, index_itemsize: int = 4,
@@ -529,7 +549,8 @@ class HaloPlan:
         link latency + bytes/bandwidth — see :func:`latency_model`) and the
         step-``pipeline`` overlap model (``exposed_phases_per_step`` /
         ``overlapped_bytes_per_step`` under ``"off"`` or
-        ``"double_buffer"`` — see :func:`overlap_model`).
+        ``"double_buffer"`` at in-flight window ``depth`` — see
+        :func:`overlap_model`).
 
         ``index_elems`` accounts side-channel *index* payloads the
         canonical float accounting excludes (the MD engine's ``(K, 2)``
@@ -544,8 +565,8 @@ class HaloPlan:
         if feature_elems is None:
             feature_elems = self.spec.feature_elems
         key = (tuple(local_shape), itemsize, feature_elems, pipeline,
-               link_latency_s, bandwidth_Bps, index_elems, index_itemsize,
-               occupancy)
+               depth, link_latency_s, bandwidth_Bps, index_elems,
+               index_itemsize, occupancy)
         if key not in self._stats_cache:
             stats = dict(compute_exchange_stats(
                 self.sched, tuple(local_shape), itemsize, feature_elems))
@@ -559,7 +580,7 @@ class HaloPlan:
             stats["latency"] = latency_model(stats, link_latency_s,
                                              bandwidth_Bps)
             overlap = overlap_model(stats, self.backend.critical_path,
-                                    pipeline)
+                                    pipeline, depth)
             stats["overlap"] = overlap
             stats["exposed_phases_per_step"] = \
                 overlap["exposed_phases_per_step"]

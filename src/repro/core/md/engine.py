@@ -13,10 +13,15 @@ hundreds of time-steps before CPU-GPU sync" (paper §3).  The scan body is
 delegated to :class:`repro.core.pipeline.StepPipeline`: ``pipeline="off"``
 runs the strictly serialized reference chain, ``"double_buffer"`` the
 software-pipelined schedule in which step N's force-return exchange is
-issued in the same program region as step N+1's coordinate sends (two-slot
-extended-force buffer, signal-ledger bookkeeping).  Re-binning/migration —
-GROMACS' DD + neighbor-search work — runs between blocks as its own
-program, off the hot path (paper §5.4).
+issued in the same program region as step N+1's coordinate sends
+(``pipeline_depth``-slot extended-force ring, signal-ledger bookkeeping;
+``depth > 2`` unrolls ``depth - 1`` steps per fused region).
+Re-binning/migration — GROMACS' DD + neighbor-search work — runs between
+blocks as its own program, off the hot path (paper §5.4); with
+``overlap_rebin=True`` the rebin/migration gather and the pair-schedule
+prune are fused INTO the block program's final region instead (GROMACS'
+DLB analogue: the nstlist-cadence work overlaps the last step's
+force/epilogue rather than costing its own host dispatch).
 
 State layout per device (all static shapes):
   cell_f (cz, cy, cx, K, 7)  [x, y, z, charge, vx, vy, vz]
@@ -65,8 +70,14 @@ class MDEngine:
     physics the spec leaves open (periodic wrap shifts from the box) and
     builds one :class:`HaloPlan` reused by every step/rebin/force program.
     ``pipeline`` selects the multi-step schedule (``"off"`` or
-    ``"double_buffer"``, see :class:`repro.core.pipeline.StepPipeline`);
-    both produce bitwise-identical trajectories.
+    ``"double_buffer"``, see :class:`repro.core.pipeline.StepPipeline`)
+    and ``pipeline_depth`` its in-flight window (ring slots; 2 = the
+    paper's double-buffered halos, >2 unrolls deeper windows);
+    every (mode, depth) produces bitwise-identical trajectories.
+    ``overlap_rebin=True`` fuses the between-block rebin/migration and
+    pair-schedule prune into the block program's final region (one
+    compiled dispatch per block instead of two or three); the fused and
+    host-dispatched paths are bitwise-identical as well.
 
     ``force_backend`` selects the NB force engine
     (:mod:`repro.core.md.pair_schedule`): ``"dense"`` (default) is the
@@ -81,7 +92,9 @@ class MDEngine:
     def __init__(self, system: MDSystem, mesh: Mesh,
                  spec: HaloSpec | None = None,
                  r_list_factor: float = 1.08, mig_frac: float = 0.125,
-                 pipeline: str = "off", force_backend: str = "dense",
+                 pipeline: str = "off", pipeline_depth: int = 2,
+                 overlap_rebin: bool = False,
+                 force_backend: str = "dense",
                  capacity_safety: float = 2.2):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
@@ -91,6 +104,9 @@ class MDEngine:
         if pipeline not in PIPELINE_MODES:
             raise ValueError(f"unknown pipeline mode {pipeline!r}; "
                              f"available: {PIPELINE_MODES}")
+        if int(pipeline_depth) < 2:
+            raise ValueError("pipeline_depth must be >= 2 (ring slots; "
+                             "2 = double-buffered halos)")
         if min(spec.widths) < 1:
             raise ValueError("MD halo widths must be >= 1 (the NB stencil "
                              "consumes one halo cell layer)")
@@ -100,6 +116,8 @@ class MDEngine:
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
+        self.pipeline_depth = int(pipeline_depth)
+        self.overlap_rebin = bool(overlap_rebin)
         self.force_backend = force_backend
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
@@ -186,9 +204,10 @@ class MDEngine:
         return out
 
     def overlap_stats(self) -> dict:
-        """Per-step overlap model at this engine's pipeline mode."""
+        """Per-step overlap model at this engine's pipeline mode/depth."""
         return self.plan.stats(self.layout.cells_per_domain,
-                               pipeline=self.pipeline_mode)["overlap"]
+                               pipeline=self.pipeline_mode,
+                               depth=self.pipeline_depth)["overlap"]
 
     def _trim_ext(self, ext):
         """First halo cell layer of an extended block (the NB stencil
@@ -306,7 +325,8 @@ class MDEngine:
     def _build_programs(self):
         layout, mig_cap = self.layout, self.mig_cap
         self.pipeline = StepPipeline.build(self.plan, self._make_step_fns(),
-                                           mode=self.pipeline_mode)
+                                           mode=self.pipeline_mode,
+                                           depth=self.pipeline_depth)
 
         def block(cell_f, cell_i, force, n_steps):
             ctx = self._block_ctx(cell_i)
@@ -341,6 +361,29 @@ class MDEngine:
             occ = lax.pmax(occ, AXES)
             return sel[None, None, None], n_keep, occ
 
+        # overlap_rebin: the nstlist-cadence DLB work (migration gather +
+        # occupancy/bbox prune) fused into the block program's final
+        # region instead of host-dispatched between blocks.  The seam is
+        # barrier-pinned so fusing cannot perturb the step physics — the
+        # fused and host-dispatched paths stay bitwise-identical.
+
+        def block_rebin(cell_f, cell_i, force, n_steps):
+            cell_f, cell_i, _f_last, metrics = block(cell_f, cell_i, force,
+                                                     n_steps)
+            cell_f, cell_i = lax.optimization_barrier((cell_f, cell_i))
+            new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
+            return new_f, new_i, force, metrics, diag
+
+        def block_sched_rebin(cell_f, cell_i, force, sel, n_steps, n_exec,
+                              k_exec):
+            cell_f, cell_i, _f_last, metrics = block_sched(
+                cell_f, cell_i, force, sel, n_steps, n_exec, k_exec)
+            cell_f, cell_i = lax.optimization_barrier((cell_f, cell_i))
+            new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
+            sel2, n_keep, occ = do_prune(new_f, new_i)
+            return (new_f, new_i, force, metrics, diag, sel2, n_keep,
+                    occ)
+
         spec = self._spec
         self.block_fn = jax.jit(
             shard_map_norep(
@@ -357,6 +400,15 @@ class MDEngine:
         self._force_fn_dense = jax.jit(shard_map_norep(
             lambda f, i: self._force_pass(f[..., :4], i),
             mesh=self.mesh, in_specs=(spec, spec), out_specs=(spec, P())))
+        if self.overlap_rebin:
+            self.block_rebin_fn = jax.jit(
+                shard_map_norep(
+                    block_rebin, mesh=self.mesh,
+                    in_specs=(spec, spec, spec, None),
+                    out_specs=(spec, spec, spec, P(), P()),
+                ),
+                static_argnums=(3,),
+            )
         if self.force_backend != "dense":
             self.block_sched_fn = jax.jit(
                 shard_map_norep(
@@ -377,6 +429,17 @@ class MDEngine:
                 ),
                 static_argnums=(3, 4),
             )
+            if self.overlap_rebin:
+                self.block_sched_rebin_fn = jax.jit(
+                    shard_map_norep(
+                        block_sched_rebin, mesh=self.mesh,
+                        in_specs=(spec, spec, spec, spec, None, None,
+                                  None),
+                        out_specs=(spec, spec, spec, P(), P(), spec,
+                                   P(), P()),
+                    ),
+                    static_argnums=(4, 5, 6),
+                )
 
     def force_fn(self, cell_f, cell_i):
         """One force pass (halo fwd -> NB -> halo rev) on global arrays.
@@ -437,6 +500,12 @@ class MDEngine:
         if self.force_backend == "dense":
             return None
         sel, n_keep, occ = self.prune_fn(cell_f, cell_i)
+        return self._bucket_exec(sel, n_keep, occ)
+
+    def _bucket_exec(self, sel, n_keep, occ):
+        """Host half of the prune: read the two global scalars and bucket
+        them into the static exec shapes of the next block program (shared
+        by the host-dispatched and ``overlap_rebin``-fused prunes)."""
         n_keep = int(jax.device_get(n_keep))
         occ = int(jax.device_get(occ))
         n_exec = bucket(n_keep, PAIR_BUCKET, self.pair_schedule.n_pairs)
@@ -448,7 +517,15 @@ class MDEngine:
         return self._sched_exec
 
     def simulate(self, n_steps: int, state=None, collect=True):
-        """Run n_steps in nstlist-sized TPU-resident blocks."""
+        """Run n_steps in nstlist-sized TPU-resident blocks.
+
+        With ``overlap_rebin`` every block that another block follows is
+        one fused dispatch (steps + rebin/migration + prune); the final
+        block — after which the host path would not rebin either — runs
+        the plain block program.  Both paths visit bitwise-identical
+        states and the host still reads only the two prune scalars per
+        block boundary.
+        """
         nst = self.system.params.nstlist
         if state is None:
             cell_f, cell_i = self.init_state()
@@ -461,7 +538,17 @@ class MDEngine:
         done = 0
         while done < n_steps:
             take = min(nst, n_steps - done)
-            if sched is None:
+            fuse = self.overlap_rebin and done + take < n_steps
+            if fuse and sched is None:
+                cell_f, cell_i, force, m, diag = self.block_rebin_fn(
+                    cell_f, cell_i, force, take)
+            elif fuse:
+                sel, n_exec, k_exec = sched
+                (cell_f, cell_i, force, m, diag, sel2, n_keep, occ) = \
+                    self.block_sched_rebin_fn(cell_f, cell_i, force, sel,
+                                              take, n_exec, k_exec)
+                sched = self._bucket_exec(sel2, n_keep, occ)
+            elif sched is None:
                 cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
                                                          force, take)
             else:
@@ -471,7 +558,9 @@ class MDEngine:
             if collect:
                 all_metrics.append(jax.device_get(m))
             done += take
-            if done < n_steps:
+            if fuse:
+                diags.append(jax.device_get(diag))
+            elif done < n_steps:
                 cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
                 sched = self._refresh_schedule(cell_f, cell_i)
                 diags.append(jax.device_get(diag))

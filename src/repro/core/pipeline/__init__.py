@@ -4,14 +4,17 @@ The layer between :class:`~repro.core.halo_plan.HaloPlan` (construct-once
 exchange plans) and the MD engine's step programs:
 
 * :class:`SignalLedger` — functional model of NVSHMEM put-with-signal
-  bookkeeping (release/acquire counters per buffer slot and pulse);
+  bookkeeping (release/acquire/clobber counters per buffer slot and
+  pulse, window-distance invariants for ``depth``-deep rings);
 * the ``"signal"`` halo backend — device-initiated pack+put pulses driving
   :func:`repro.kernels.halo_pack.put_signal` / ``fused_pulses`` end to end
   (registered into the :mod:`repro.core.halo_plan` backend registry on
   import);
-* :class:`StepPipeline` — double-buffered, software-pipelined multi-step
-  ``lax.scan`` programs in which step ``N``'s force-return exchange
-  overlaps step ``N+1``'s coordinate sends.
+* :class:`StepPipeline` — software-pipelined multi-step ``lax.scan``
+  programs with a ``depth``-slot extended-force ring: step ``N``'s
+  force-return exchange overlaps step ``N+1``'s coordinate sends, and
+  ``depth > 2`` keeps ``depth - 1`` steps resident per fused program
+  region.
 """
 from repro.core.pipeline.ledger import KINDS, LedgerState, SignalLedger
 from repro.core.pipeline.signal_backend import SignalBackend

@@ -3,20 +3,23 @@
 The paper's GPU-initiated kernels coordinate through *signals*: every
 ``nvshmem_put_signal_nbi`` atomically deposits data AND bumps a flag on
 the receiver; consumers spin on ``acquire_wait(ctx.signal[p])`` before
-touching the payload (Alg. 5).  Multi-step overlap (double-buffered halos)
-additionally needs per-*slot* flags so step ``N+1``'s puts cannot clobber a
-buffer step ``N`` is still reading.
+touching the payload (Alg. 5).  Multi-step overlap (``depth``-buffered
+halos) additionally needs per-*slot* flags so step ``N + depth - 1``'s
+puts cannot clobber a buffer step ``N`` is still reading — the buffer
+ring's reuse distance is exactly the in-flight window ``depth``.
 
 XLA has no blocking primitive, so on TPU the dependency itself is carried
 by the dataflow graph (a ``ppermute``/remote-copy result feeding its
 consumer); what still needs modeling is the *bookkeeping* — which slot's
-signals were released/acquired, and whether every acquire had a matching
-release.  :class:`SignalLedger` is that model: a static slot layout
-``(kind, buffer slot, pulse)`` plus a :class:`LedgerState` pytree of
-release/acquire counters threaded through the step ``lax.scan``.  A real
-NVSHMEM backend would block where this ledger counts; tests assert the
-conservation laws (acquired <= released, final balance per slot) that the
-hardware flags would enforce.
+signals were released/acquired, whether every acquire had a matching
+release, and whether a release ever landed on a slot still holding an
+unconsumed deposit (the clobber the ring exists to prevent).
+:class:`SignalLedger` is that model: a static slot layout ``(kind, buffer
+slot, pulse)`` plus a :class:`LedgerState` pytree of release/acquire/
+clobber counters threaded through the step ``lax.scan``.  A real NVSHMEM
+backend would block where this ledger counts; tests assert the
+conservation laws (acquired <= released, zero clobbers, zero in-flight
+after the drain epilogue) that the hardware flags would enforce.
 """
 from __future__ import annotations
 
@@ -33,6 +36,8 @@ class LedgerState(NamedTuple):
 
     released: jnp.ndarray   # int32[n_slots] — put-with-signal deposits
     acquired: jnp.ndarray   # int32[n_slots] — acquire_wait completions
+    clobbers: jnp.ndarray   # int32[n_slots] — releases onto a still-
+    #                         outstanding slot (ring-reuse violations)
 
 
 @dataclass(frozen=True)
@@ -41,7 +46,11 @@ class SignalLedger:
 
     One signal per (kind, buffer slot, pulse): ``fwd`` signals gate the
     force kernel's reads of received coordinate halos, ``rev`` signals
-    gate the integrator's reads of returned halo forces.
+    gate the integrator's reads of returned halo forces.  ``depth`` is
+    the in-flight window: a buffer slot is re-released only ``depth``
+    steps after its previous release, so a correctly scheduled window
+    keeps every slot's outstanding count in ``{0, 1}`` and the clobber
+    counters at zero (see :meth:`window_safe`).
     """
 
     depth: int       # halo buffer slots (2 = double buffer)
@@ -63,21 +72,31 @@ class SignalLedger:
 
     def init(self) -> LedgerState:
         z = jnp.zeros((self.n_slots,), jnp.int32)
-        return LedgerState(released=z, acquired=z)
+        return LedgerState(released=z, acquired=z, clobbers=z)
 
     # -- transitions (pure; ``buf`` may be a traced slot parity) -----------
 
     def release(self, st: LedgerState, kind: str, buf) -> LedgerState:
-        """All of (kind, buf)'s pulse signals fire: puts were issued."""
-        return LedgerState(self._bump(st.released, kind, buf), st.acquired)
+        """All of (kind, buf)'s pulse signals fire: puts were issued.
+
+        A release onto a slot whose previous deposit is still unacquired
+        is the buffer-clobber hazard the ring guards against; it is
+        counted (not blocked — the ledger is a monitor, not a lock)."""
+        idx = self._idx(kind, buf)
+        outstanding = st.released[idx] - st.acquired[idx]
+        clobbers = st.clobbers.at[idx].add(
+            (outstanding >= 1).astype(jnp.int32))
+        return LedgerState(st.released.at[idx].add(1), st.acquired,
+                           clobbers)
 
     def acquire(self, st: LedgerState, kind: str, buf) -> LedgerState:
         """All of (kind, buf)'s pulse signals are consumed (acquire_wait)."""
-        return LedgerState(st.released, self._bump(st.acquired, kind, buf))
+        return LedgerState(st.released,
+                           st.acquired.at[self._idx(kind, buf)].add(1),
+                           st.clobbers)
 
-    def _bump(self, arr: jnp.ndarray, kind: str, buf) -> jnp.ndarray:
-        idx = self.slot(kind, buf, 0) + jnp.arange(self.n_pulses)
-        return arr.at[idx].add(1)
+    def _idx(self, kind: str, buf) -> jnp.ndarray:
+        return self.slot(kind, buf, 0) + jnp.arange(self.n_pulses)
 
     # -- invariants --------------------------------------------------------
 
@@ -85,9 +104,23 @@ class SignalLedger:
         """released - acquired per slot (>= 0 iff causally consistent)."""
         return st.released - st.acquired
 
+    def in_flight(self, st: LedgerState) -> jnp.ndarray:
+        """Total deposits released but not yet acquired."""
+        return self.outstanding(st).sum()
+
+    def drained(self, st: LedgerState) -> jnp.ndarray:
+        """True iff no deposit is in flight (the epilogue's exit state)."""
+        return jnp.all(self.outstanding(st) == 0)
+
     def consistent(self, st: LedgerState) -> jnp.ndarray:
         """True iff no signal was ever acquired before its release."""
         return jnp.all(st.acquired <= st.released)
+
+    def window_safe(self, st: LedgerState) -> jnp.ndarray:
+        """True iff no release ever clobbered an outstanding slot — the
+        guarantee a ``depth``-deep ring provides to a window that keeps
+        at most ``depth - 1`` steps in flight."""
+        return jnp.all(st.clobbers == 0)
 
     def summary(self, st: LedgerState) -> dict:
         """Host-side totals per kind (call outside jit on a final state)."""
@@ -100,4 +133,7 @@ class SignalLedger:
                 "acquired": int(st.acquired[lo:hi].sum()),
             }
         out["consistent"] = bool(self.consistent(st))
+        out["in_flight"] = int(self.in_flight(st))
+        out["clobbers"] = int(st.clobbers.sum())
+        out["window_safe"] = bool(self.window_safe(st))
         return out

@@ -1,4 +1,4 @@
-"""StepPipeline: persistent, double-buffered multi-step halo programs.
+"""StepPipeline: persistent, depth-buffered multi-step halo programs.
 
 The paper's headline gains come from *fusing communication into the step
 program*: GPU-initiated sends overlap force compute so hardware hides the
@@ -11,24 +11,34 @@ pre-planned exchange.  :class:`StepPipeline` is that seam between a
   with a scan-iteration barrier between the force return of step ``N``
   and the coordinate sends of step ``N+1`` (the CPU-round-trip analogue).
 
-* ``pipeline="double_buffer"`` — the software-pipelined schedule: the step
-  program is skewed so one scan iteration issues step ``N``'s force-return
-  (reverse) exchange and step ``N+1``'s coordinate (forward) exchange in
-  the SAME fused program region.  Extended force buffers live in a
-  ``depth``-slot ring (two slots = the paper's double-buffered halos): the
-  reverse path drains slot ``N % depth`` while the force kernel fills slot
-  ``(N+1) % depth``, so XLA's async collectives can overlap the two
-  transfers — puts of one step never wait on (or clobber) the buffer of
-  the other.  A :class:`~repro.core.pipeline.ledger.SignalLedger` threads
+* ``pipeline="double_buffer"`` — the software-pipelined schedule with an
+  arbitrary ``depth >= 2`` in-flight window.  Extended force buffers live
+  in a ``depth``-slot ring (two slots = the paper's double-buffered
+  halos); each step's force-return signal is *released at fill time* —
+  the put is issued the moment the force kernel writes its slot — and
+  acquired one step later, right before the integrator consumes it, so
+  the transfer spans a step boundary.  The scan body is unrolled over
+  ``depth - 1`` consecutive steps: one fused program region carries the
+  reverse exchanges of ``depth - 1`` steps alongside the next steps'
+  coordinate sends, XLA's async collectives are free to overlap every
+  transfer inside the window, and the ring guarantees the puts of step
+  ``N + depth - 1`` never clobber a slot step ``N`` is still draining.
+  Steps that do not fill a whole window, plus the final force return,
+  drain in an epilogue loop over the last (up to) ``depth - 1`` slots.
+  A :class:`~repro.core.pipeline.ledger.SignalLedger` threads the
   put-with-signal bookkeeping through the scan carry.
 
-Both modes compute bit-identical trajectories: pipelining regroups the
-exact same per-step operations across scan iterations (prologue runs step
-0's forward half, the epilogue drains the last force return).  Exchange
-boundaries are ``optimization_barrier``s — the XLA realization of the
-signal acquire: consumers cannot be fused or hoisted across the wait, so
-the physics islands compile identically for every backend and the
-trajectory stays bitwise-stable across backends and pipeline modes.
+Both modes compute bit-identical trajectories at every depth: pipelining
+regroups the exact same per-step operations across scan iterations (the
+prologue runs step 0's forward half, the epilogue drains the tail), and
+the physics chain itself stays strictly serial — velocity Verlet needs
+step ``N``'s returned forces before step ``N+1``'s kick-drift, so the
+window deepens the *communication* schedule, never the integrator.
+Exchange boundaries are ``optimization_barrier``s — the XLA realization
+of the signal acquire: consumers cannot be fused or hoisted across the
+wait, so the physics islands compile identically for every backend and
+the trajectory stays bitwise-stable across backends, pipeline modes, and
+window depths.
 """
 from __future__ import annotations
 
@@ -76,6 +86,11 @@ class StepFns:
                      Tuple[Any, jnp.ndarray, Metrics]]
 
 
+def _stack1(m: Metrics) -> Metrics:
+    """Add a leading length-1 step axis to every metric."""
+    return {k: v[None] for k, v in m.items()}
+
+
 class StepPipeline:
     """Construct-once multi-step program over one :class:`HaloPlan`."""
 
@@ -89,7 +104,7 @@ class StepPipeline:
         self.plan = plan
         self.fns = fns
         self.mode = mode
-        self.depth = depth if mode == "double_buffer" else 1
+        self.depth = int(depth) if mode == "double_buffer" else 1
         self.ledger = SignalLedger(depth=self.depth,
                                    n_pulses=max(1, plan.sched.total_pulses))
 
@@ -152,10 +167,45 @@ class StepPipeline:
             step, (state, f0, ledger.init()), None, length=n_steps)
         return state, f, metrics, led
 
+    # -- the depth-d window ------------------------------------------------
+
+    def _pipelined_step(self, carry, k, ctx):
+        """Drain step ``k-1``'s force return, issue step ``k``'s forward
+        half (the skew-one unit every window is built from).
+
+        The rev signal of step ``k-1`` was released when the force kernel
+        filled its slot (previous step / prologue); here it is acquired
+        right before the integrator's kick consumes the returned forces.
+        Step ``k``'s own rev release fires at fill time below, so its
+        transfer sits in the same program region as the NEXT unit's work
+        — and, with ``depth > 2``, the same region as the following
+        ``depth - 2`` units of the unrolled window.
+        """
+        fns, ledger, depth = self.fns, self.ledger, self.depth
+        state, slots, aux, led = carry
+        prev, cur = (k - 1) % depth, k % depth
+        F_prev = lax.dynamic_index_in_dim(slots, prev, 0, keepdims=False)
+        f_prev = self._rev(F_prev)
+        led = ledger.acquire(led, "rev", prev)
+        state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
+        state, aux, payload = fns.begin(state, f_carry, ctx)
+        led = ledger.release(led, "fwd", cur)
+        ext = self._fwd(payload)
+        led = ledger.acquire(led, "fwd", cur)
+        F_ext, m_force = fns.force(ext, ctx)
+        slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
+        led = ledger.release(led, "rev", cur)
+        # pin the step boundary (see _run_serial)
+        state, slots = lax.optimization_barrier((state, slots))
+        return (state, slots, aux, led), m_force, m_fin
+
     def _run_pipelined(self, state, f0, n_steps, ctx):
         fns, ledger, depth = self.fns, self.ledger, self.depth
+        span = depth - 1           # steps resident per fused window region
 
-        # prologue: step 0's forward half fills buffer slot 0
+        # prologue: step 0's forward half fills buffer slot 0; its force-
+        # return signal is released immediately — the put is in flight
+        # across the first window boundary
         state, aux, payload = fns.begin(state, f0, ctx)
         led = ledger.release(ledger.init(), "fwd", 0)
         ext = self._fwd(payload)
@@ -163,57 +213,69 @@ class StepPipeline:
         F0, m_force0 = fns.force(ext, ctx)
         slots = jnp.zeros((depth,) + F0.shape, F0.dtype)
         slots = lax.dynamic_update_index_in_dim(slots, F0, 0, 0)
+        led = ledger.release(led, "rev", 0)
 
-        def pipelined_step(carry, k):
-            state, slots, aux, led = carry
-            prev, cur = (k - 1) % depth, k % depth
-            # step k-1's force return is issued FIRST, so its transfers sit
-            # in the same program region as step k's forward sends below —
-            # no scan-iteration barrier between them, and they drain/fill
-            # different buffer slots
-            F_prev = lax.dynamic_index_in_dim(slots, prev, 0,
-                                              keepdims=False)
-            led = ledger.release(led, "rev", prev)
-            f_prev = self._rev(F_prev)
-            led = ledger.acquire(led, "rev", prev)
-            state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
-            # step k's forward half overlaps the drain above
-            state, aux, payload = fns.begin(state, f_carry, ctx)
-            led = ledger.release(led, "fwd", cur)
-            ext = self._fwd(payload)
-            led = ledger.acquire(led, "fwd", cur)
-            F_ext, m_force = fns.force(ext, ctx)
-            slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
-            # pin the step boundary (see _run_serial)
-            state, slots = lax.optimization_barrier((state, slots))
-            return (state, slots, aux, led), \
-                {"force": m_force, "finish": m_fin}
+        m_force_chunks = [_stack1(m_force0)]
+        m_fin_chunks = []
+        carry = (state, slots, aux, led)
 
-        (state, slots, aux, led), mids = lax.scan(
-            pipelined_step, (state, slots, aux, led),
-            jnp.arange(1, n_steps))
+        # main scan: whole windows of `span` steps; the python loop
+        # unrolls the window into ONE fused program region, so the rev
+        # exchanges of `span` consecutive steps overlap inside it
+        n_full = (n_steps - 1) // span
+        if n_full:
+            ks = jnp.arange(1, 1 + n_full * span, dtype=jnp.int32) \
+                .reshape(n_full, span)
 
-        # epilogue: drain the last step's force return
+            def window(carry, ks_row):
+                mf, mn = [], []
+                for j in range(span):
+                    carry, m_force, m_fin = self._pipelined_step(
+                        carry, ks_row[j], ctx)
+                    mf.append(m_force)
+                    mn.append(m_fin)
+                mf = {k: jnp.stack([m[k] for m in mf]) for k in mf[0]}
+                mn = {k: jnp.stack([m[k] for m in mn]) for k in mn[0]}
+                return carry, (mf, mn)
+
+            carry, (mfs, mns) = lax.scan(window, carry, ks)
+            # (n_full, span, ...) -> (n_full * span, ...)
+            m_force_chunks.append(
+                {k: v.reshape((-1,) + v.shape[2:]) for k, v in mfs.items()})
+            m_fin_chunks.append(
+                {k: v.reshape((-1,) + v.shape[2:]) for k, v in mns.items()})
+
+        # epilogue: drain loop over the last (up to) depth-1 slots — the
+        # `rem` steps that do not fill a whole window, then the final
+        # step's outstanding force return
+        for k in range(1 + n_full * span, n_steps):
+            carry, m_force, m_fin = self._pipelined_step(
+                carry, jnp.int32(k), ctx)
+            m_force_chunks.append(_stack1(m_force))
+            m_fin_chunks.append(_stack1(m_fin))
+        state, slots, aux, led = carry
         last = (n_steps - 1) % depth
         F_last = lax.dynamic_index_in_dim(slots, last, 0, keepdims=False)
-        led = ledger.release(led, "rev", last)
         f_last = self._rev(F_last)
         led = ledger.acquire(led, "rev", last)
         state, f_carry, m_fin_last = fns.finish(state, aux, f_last, ctx)
+        m_fin_chunks.append(_stack1(m_fin_last))
 
-        # re-align per-step metrics: iteration k emitted step k's force
-        # metrics but step k-1's finish metrics
+        # re-align per-step metrics: the prologue/windows emitted step k's
+        # force metrics but step k-1's finish metrics
         metrics: Metrics = {}
-        for key, v in m_force0.items():
-            metrics[key] = jnp.concatenate([v[None], mids["force"][key]])
-        for key, v in m_fin_last.items():
-            metrics[key] = jnp.concatenate([mids["finish"][key], v[None]])
+        for key in m_force0:
+            metrics[key] = jnp.concatenate(
+                [c[key] for c in m_force_chunks])
+        for key in m_fin_last:
+            metrics[key] = jnp.concatenate([c[key] for c in m_fin_chunks])
         return state, f_carry, metrics, led
 
     # -- introspection -----------------------------------------------------
 
     def stats(self, local_shape, **kw) -> dict:
-        """Plan stats at this pipeline mode (overlap + latency model)."""
+        """Plan stats at this pipeline mode/depth (overlap + latency)."""
+        kw.setdefault("depth", max(self.depth, 2))
         return self.plan.stats(local_shape, pipeline=self.mode, **kw)
 
     def __repr__(self):

@@ -202,7 +202,8 @@ HALO_BACKENDS = ("serialized", "fused", "pallas", "signal")
 
 
 def halo_cell_name(dd_name: str, backend: str, width: int = 1,
-                   pulses: int = 1, pipeline: str = "off") -> str:
+                   pulses: int = 1, pipeline: str = "off",
+                   depth: int = 2) -> str:
     name = f"halo__{dd_name}__{backend}"
     if width != 1:
         name += f"__w{width}"
@@ -210,19 +211,23 @@ def halo_cell_name(dd_name: str, backend: str, width: int = 1,
         name += f"__p{pulses}"
     if pipeline != "off":
         name += f"__{pipeline}"
+        if depth != 2:
+            name += f"__d{depth}"
     return name
 
 
 def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
                   width: int = 1, pulses: int = 1, pipeline: str = "off",
-                  verbose: bool = True):
+                  depth: int = 2, verbose: bool = True):
     """Lower + compile one HaloPlan.fwd cell and record plan + HLO stats.
 
     The plan-reported byte/critical-path numbers are the canonical ones
     (results/make_tables.py reads them); the compiled-HLO collective bytes
     cross-check that XLA moves what the plan says it moves.  ``width`` /
-    ``pulses`` select the width>1 multi-pulse schedules; ``pipeline``
-    selects the per-step overlap model recorded under ``overlap``.
+    ``pulses`` select the width>1 multi-pulse schedules; ``pipeline`` /
+    ``depth`` select the per-step overlap model recorded under
+    ``overlap`` (the depth sweep makes the exposed-phase amortization of
+    deeper in-flight windows measurable before real-mesh runs).
     """
     from repro.core.halo_plan import HaloPlan, HaloSpec
     from repro.launch.mesh import make_mesh
@@ -230,7 +235,7 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
     t0 = time.time()
     record = {"kind": "halo", "dd": dd_name, "backend": backend,
               "local": list(local), "width": width, "pulses": pulses,
-              "pipeline": pipeline, "ok": False}
+              "pipeline": pipeline, "pipeline_depth": depth, "ok": False}
     try:
         dd = HALO_DD[dd_name]
         mesh = make_mesh(dd, ("z", "y", "x"))
@@ -246,7 +251,7 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
         lowered = jax.jit(lambda a: plan.fwd(a)).lower(arg)
         compiled = lowered.compile()
         parsed = hlo_analysis.analyze(compiled.as_text())
-        stats = plan.stats(local, pipeline=pipeline)
+        stats = plan.stats(local, pipeline=pipeline, depth=depth)
         record.update({
             "ok": True,
             "devices": int(np.prod(dd)),
@@ -275,19 +280,21 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
 
 
 def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
-                   pipeline: str = "off"):
+                   pipeline: str = "off", depth: int = 2):
     RESULTS.mkdir(parents=True, exist_ok=True)
     for dd_name in HALO_DD:
         for backend in HALO_BACKENDS:
-            name = halo_cell_name(dd_name, backend, width, pulses, pipeline)
+            name = halo_cell_name(dd_name, backend, width, pulses,
+                                  pipeline, depth)
             path = RESULTS / f"{name}.json"
             if path.exists() and not force:
                 print(f"[skip] {path.name} exists")
                 continue
             print(f"[halo] {dd_name} x {backend} w={width} p={pulses} "
-                  f"pipeline={pipeline}", flush=True)
+                  f"pipeline={pipeline} depth={depth}", flush=True)
             rec = run_halo_cell(dd_name, backend, width=width,
-                                pulses=pulses, pipeline=pipeline)
+                                pulses=pulses, pipeline=pipeline,
+                                depth=depth)
             path.write_text(json.dumps(rec, indent=1))
             print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
                   f"({rec['wall_s']}s)", flush=True)
@@ -297,10 +304,12 @@ def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
 
 def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
                 n_atoms: int = 800, steps: int = 6, dd=(2, 2, 2),
-                pipeline: str = "off", verbose: bool = True):
+                pipeline: str = "off", depth: int = 2,
+                overlap_rebin: bool = False, verbose: bool = True):
     """Run a short DD simulation and record the chosen force backend, its
-    prune ratio / evaluated-work accounting, and the occupancy-adjusted
-    halo byte accounting (``bytes_index`` / ``useful_bytes``)."""
+    prune ratio / evaluated-work accounting, the occupancy-adjusted halo
+    byte accounting (``bytes_index`` / ``useful_bytes``), and the
+    overlap model at the engine's pipeline depth."""
     from repro.core.halo_plan import HaloSpec
     from repro.core.md import MDEngine, make_grappa_like
     from repro.launch.mesh import make_mesh
@@ -309,6 +318,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
     dd_name = f"{sum(1 for d in dd if d > 1)}d"
     record = {"kind": "mdforce", "dd": dd_name, "backend": halo_backend,
               "force_backend": force_backend, "pipeline": pipeline,
+              "pipeline_depth": depth, "overlap_rebin": overlap_rebin,
               "n_atoms": n_atoms, "ok": False}
     try:
         mesh = make_mesh(dd, ("z", "y", "x"))
@@ -316,6 +326,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
         spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
                         backend=halo_backend)
         eng = MDEngine(system, mesh, spec, pipeline=pipeline,
+                       pipeline_depth=depth, overlap_rebin=overlap_rebin,
                        force_backend=force_backend)
         _, metrics, diags = eng.simulate(steps)
         record.update({
@@ -325,6 +336,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
             "halo_stats": {k: v for k, v in eng.halo_stats().items()
                            if k in ("total_bytes", "bytes_index",
                                     "useful_bytes", "occupancy")},
+            "overlap": eng.overlap_stats(),
             "pe_final": float(np.asarray(metrics["pe"])[-1]),
             "n_atoms_conserved": int(np.asarray(diags[-1]["n_atoms"]))
             == n_atoms,
@@ -347,19 +359,26 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
 
 
 def run_md_cells(force_backend: str, force: bool = False,
-                 halo_backend: str = "fused", pipeline: str = "off"):
+                 halo_backend: str = "fused", pipeline: str = "off",
+                 depth: int = 2, overlap_rebin: bool = False):
     RESULTS.mkdir(parents=True, exist_ok=True)
     name = f"mdforce__3d__{halo_backend}__{force_backend}"
     if pipeline != "off":
         name += f"__{pipeline}"
+        if depth != 2:
+            name += f"__d{depth}"
+    if overlap_rebin:
+        name += "__or"
     path = RESULTS / f"{name}.json"
     if path.exists() and not force:
         print(f"[skip] {path.name} exists")
         return
     print(f"[mdforce] 3d x {halo_backend} x force={force_backend} "
-          f"pipeline={pipeline}", flush=True)
+          f"pipeline={pipeline} depth={depth} "
+          f"overlap_rebin={overlap_rebin}", flush=True)
     rec = run_md_cell(force_backend=force_backend,
-                      halo_backend=halo_backend, pipeline=pipeline)
+                      halo_backend=halo_backend, pipeline=pipeline,
+                      depth=depth, overlap_rebin=overlap_rebin)
     path.write_text(json.dumps(rec, indent=1))
     print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
           f"({rec['wall_s']}s)", flush=True)
@@ -391,6 +410,12 @@ def main():
                     choices=["off", "double_buffer"],
                     help="step-pipeline overlap model recorded with "
                          "--halo cells")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight window depth for the overlap model "
+                         "(--halo) / the engine ring (--md)")
+    ap.add_argument("--overlap-rebin", action="store_true",
+                    help="fuse rebin/migration + prune into the --md "
+                         "block program (GROMACS DLB analogue)")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--pod-compress", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
@@ -404,11 +429,13 @@ def main():
         return
     if args.halo:
         run_halo_cells(force=args.force, width=args.halo_width,
-                       pulses=args.halo_pulses, pipeline=args.pipeline)
+                       pulses=args.halo_pulses, pipeline=args.pipeline,
+                       depth=args.pipeline_depth)
         return
     if args.md:
         run_md_cells(force_backend=args.force_backend, force=args.force,
-                     pipeline=args.pipeline)
+                     pipeline=args.pipeline, depth=args.pipeline_depth,
+                     overlap_rebin=args.overlap_rebin)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

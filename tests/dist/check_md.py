@@ -1,11 +1,12 @@
 """8-virtual-device MD check: DD equivalence, migration, step pipeline.
 
 The step-pipeline acceptance bar: on a 2x2x2 DD mesh the pipelined engine
-(``backend="signal"``, ``pipeline="double_buffer"``) must produce
-trajectories bitwise-identical to the serialized non-pipelined engine
-over >= 10 steps, including across a rebin/migration boundary; and the
-8-device run must agree with the single-device reference physics (DD
-equivalence, atom conservation).
+(``backend="signal"``, ``pipeline="double_buffer"`` at any window depth
+>= 2, with or without the fused ``overlap_rebin`` DLB program) must
+produce trajectories bitwise-identical to the serialized non-pipelined
+host-dispatched engine over >= 10 steps, including across a
+rebin/migration boundary; and the 8-device run must agree with the
+single-device reference physics (DD equivalence, atom conservation).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python tests/dist/check_md.py
@@ -22,10 +23,11 @@ AXES = ("z", "y", "x")
 
 
 def run(system, mesh, backend, pipeline, n_steps, pulses=None, widths=None,
-        force_backend="dense"):
+        force_backend="dense", depth=2, overlap_rebin=False):
     spec = HaloSpec(axis_names=AXES, widths=widths or (1, 1, 1),
                     backend=backend, pulses=pulses)
     eng = MDEngine(system, mesh, spec, pipeline=pipeline,
+                   pipeline_depth=depth, overlap_rebin=overlap_rebin,
                    force_backend=force_backend)
     (cf, ci), metrics, diags = eng.simulate(n_steps)
     return (np.asarray(jax.device_get(cf)), np.asarray(jax.device_get(ci)),
@@ -47,24 +49,40 @@ def main():
           len(diags_ref), "rebins")
 
     # --- pipelined put-with-signal engine: bitwise-identical trajectory ---
-    cases = [("signal", "double_buffer", None),
-             ("signal", "off", None),
-             ("serialized", "double_buffer", None)]
-    for backend, pipeline, pulses in cases:
-        cf, ci, m, _, eng = run(system, mesh, backend, pipeline, n_steps,
-                                pulses=pulses)
+    # (window depths 2/3/4 and the fused overlap_rebin DLB program all
+    # regroup the same per-step ops; every cell must match bit for bit)
+    cases = [("signal", "double_buffer", 2, False),
+             ("signal", "off", 2, False),
+             ("serialized", "double_buffer", 2, False),
+             ("signal", "double_buffer", 3, False),
+             ("signal", "double_buffer", 4, True),
+             ("serialized", "off", 2, True)]
+    for backend, pipeline, depth, ovr in cases:
+        cf, ci, m, diags, eng = run(system, mesh, backend, pipeline,
+                                    n_steps, depth=depth,
+                                    overlap_rebin=ovr)
+        tag = f"{backend}/{pipeline}/d{depth}" + ("/ovr" if ovr else "")
         assert np.array_equal(cf, cf_ref), \
-            f"{backend}/{pipeline} cell_f differs from serialized/off"
-        assert np.array_equal(ci, ci_ref), \
-            f"{backend}/{pipeline} cell_i differs"
+            f"{tag} cell_f differs from serialized/off"
+        assert np.array_equal(ci, ci_ref), f"{tag} cell_i differs"
         for k in m_ref:
-            assert np.array_equal(m[k], m_ref[k]), \
-                (backend, pipeline, k)
-        print(f"{backend}/{pipeline}: trajectory bitwise identical over "
-              f"{n_steps} steps")
+            assert np.array_equal(m[k], m_ref[k]), (tag, k)
+        assert len(diags) == len(diags_ref), tag   # same rebin cadence
+        for got_d, ref_d in zip(diags, diags_ref):
+            for k in ref_d:
+                assert np.array_equal(np.asarray(got_d[k]),
+                                      np.asarray(ref_d[k])), (tag, k)
+        print(f"{tag}: trajectory bitwise identical over {n_steps} steps")
 
-    ov = eng.overlap_stats()
-    assert ov["overlapped_bytes_per_step"] > 0
+    deep_stats = [MDEngine(system, mesh,
+                           HaloSpec(axis_names=AXES, widths=(1, 1, 1),
+                                    backend="signal"),
+                           pipeline="double_buffer", pipeline_depth=d)
+                  .overlap_stats() for d in (2, 3, 4)]
+    assert all(ov["overlapped_bytes_per_step"] > 0 for ov in deep_stats)
+    exposed = [ov["exposed_phases_per_step"] for ov in deep_stats]
+    assert exposed[0] > exposed[1] > exposed[2], exposed
+    print("overlap model exposed phases decrease with depth:", exposed)
 
     # --- energy sanity on the DD run -----------------------------------
     E = m_ref["pe"] + m_ref["ke"]
@@ -107,18 +125,32 @@ def main():
               f"prune ratio {ratio:.2f}x")
 
     # --- pruned backend under the step pipeline: schedule threading ----
-    # sparse/off and sparse/double_buffer must stay bitwise-identical to
-    # EACH OTHER (the block-constant schedule rides the StepFns ctx, so
-    # the pipeline invariant holds per force backend)
-    cf_a, ci_a, m_a, _, _ = run(system, mesh, "signal", "off", n_steps,
-                                force_backend="sparse")
-    cf_b, ci_b, m_b, _, _ = run(system, mesh, "signal", "double_buffer",
-                                n_steps, force_backend="sparse")
-    assert np.array_equal(cf_a, cf_b) and np.array_equal(ci_a, ci_b), \
-        "sparse off vs double_buffer trajectories differ"
-    for k in m_a:
-        assert np.array_equal(m_a[k], m_b[k]), k
-    print("sparse/off == sparse/double_buffer bitwise (signal backend)")
+    # sparse/off, sparse/double_buffer (any depth), and the fused
+    # overlap_rebin path must stay bitwise-identical to EACH OTHER (the
+    # block-constant schedule rides the StepFns ctx, and the fused
+    # rebin+prune program computes the exact host-dispatched schedule)
+    cf_a, ci_a, m_a, d_a, eng_a = run(system, mesh, "signal", "off",
+                                      n_steps, force_backend="sparse")
+    variants = [("double_buffer", 3, False), ("double_buffer", 2, True),
+                ("off", 2, True)]
+    for pipeline, depth, ovr in variants:
+        cf_b, ci_b, m_b, d_b, eng_b = run(
+            system, mesh, "signal", pipeline, n_steps,
+            force_backend="sparse", depth=depth, overlap_rebin=ovr)
+        tag = f"sparse/{pipeline}/d{depth}" + ("/ovr" if ovr else "")
+        assert np.array_equal(cf_a, cf_b) and np.array_equal(ci_a, ci_b), \
+            f"{tag} trajectory differs from sparse/off"
+        for k in m_a:
+            assert np.array_equal(m_a[k], m_b[k]), (tag, k)
+        # the fused prune must hand the NEXT block the same exec schedule
+        # (prune conservativeness across the block boundary: identical
+        # surviving-pair sets, identical bucketed shapes)
+        sel_a, n_a, k_a = eng_a._sched_exec
+        sel_b, n_b, k_b = eng_b._sched_exec
+        assert (n_a, k_a) == (n_b, k_b), tag
+        assert np.array_equal(np.asarray(jax.device_get(sel_a)),
+                              np.asarray(jax.device_get(sel_b))), tag
+        print(f"{tag} == sparse/off bitwise, same post-boundary schedule")
 
     print("check_md OK")
 

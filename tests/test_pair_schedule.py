@@ -249,6 +249,59 @@ def test_backend_parity_random_systems(n, seed):
     assert_parity(out)
 
 
+# ---- overlap_rebin: fused rebin/migration/prune invariants ----------------
+
+def test_overlap_rebin_fused_path_matches_host_dispatch():
+    """24 steps (nstlist=20: one rebin/migration/prune boundary): fusing
+    the DLB work into the block program must (a) reproduce the
+    host-dispatched trajectory and migration diagnostics bit for bit,
+    (b) hand the next block the exact same pruned schedule, and (c) keep
+    the prune conservative across the block boundary — evaluating the
+    full unpruned worklist on the final state changes nothing."""
+    from repro.core.halo_plan import HaloSpec
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+
+    sys_ = make_grappa_like(300, seed=9)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                    backend="fused")
+    host = MDEngine(sys_, mesh, spec, force_backend="sparse")
+    fused = MDEngine(sys_, mesh, spec, force_backend="sparse",
+                     overlap_rebin=True)
+    (cf_h, ci_h), m_h, d_h = host.simulate(24)
+    (cf_f, ci_f), m_f, d_f = fused.simulate(24)
+
+    np.testing.assert_array_equal(np.asarray(cf_f), np.asarray(cf_h))
+    np.testing.assert_array_equal(np.asarray(ci_f), np.asarray(ci_h))
+    for k in m_h:
+        np.testing.assert_array_equal(np.asarray(m_f[k]),
+                                      np.asarray(m_h[k]))
+    assert len(d_f) == len(d_h)
+    for a, b in zip(d_f, d_h):
+        for k in b:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+    # (b) identical post-boundary exec schedule (fused prune == prune_fn)
+    sel_h, n_h, k_h = host._sched_exec
+    sel_f, n_f, k_f = fused._sched_exec
+    assert (n_h, k_h) == (n_f, k_f)
+    np.testing.assert_array_equal(np.asarray(sel_f), np.asarray(sel_h))
+
+    # (c) conservativeness across the boundary: the pruned schedule's
+    # forces on the final state match the full unpruned worklist's
+    F_pruned, pe_pruned = fused._force_fn_sched(cf_f, ci_f, sel_f, n_f,
+                                                k_f)
+    sched = fused.pair_schedule
+    F_full, pe_full = fused._force_fn_sched(cf_f, ci_f, sel_f,
+                                            sched.n_pairs, k_f)
+    scale = max(float(jnp.abs(F_full).max()), 1.0)
+    assert float(jnp.abs(F_pruned - F_full).max()) / scale < FORCE_RTOL
+    assert abs(float(pe_pruned - pe_full)) / \
+        max(abs(float(pe_full)), 1.0) < PE_RTOL
+
+
 # ---- sparse forces against the O(N^2) oracle ------------------------------
 
 def test_sparse_engine_matches_direct_oracle():

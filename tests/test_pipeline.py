@@ -1,10 +1,23 @@
 """StepPipeline subsystem: ledger, overlap schedules, signal backend, MD.
 
-Single-device (periodic self-exchange) checks run in-process; the
-multi-device versions live in tests/dist/check_halo.py / check_md.py.
+The pipeline's conformance bar is a single parametrized MATRIX — backend
+x pipeline mode x halo width x window depth — every cell of which must be
+bitwise-identical to the serialized/off reference (replacing the old
+hand-enumerated per-case tests, which could not keep up with the
+multiplicative axis growth).  Single-device (periodic self-exchange)
+cells run in-process; the multi-device versions live in
+tests/dist/check_halo.py / check_md.py.
 """
+import functools
+
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; hypothesis is a dev extra
+    from _hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -123,9 +136,99 @@ def test_ledger_slot_parity_is_traceable():
     assert int(out[led.slot("fwd", 0, 0)]) == 0
 
 
+def test_ledger_detects_slot_clobber():
+    """A second release onto a still-outstanding slot is the buffer
+    overwrite the depth-d ring exists to prevent."""
+    led = SignalLedger(depth=2, n_pulses=1)
+    st_ = led.release(led.init(), "rev", 0)
+    assert bool(led.window_safe(st_))
+    st_ = led.release(st_, "rev", 0)         # slot 0 never acquired
+    assert not bool(led.window_safe(st_))
+    assert int(st_.clobbers.sum()) == 1
+    # acquire-then-release is the legal reuse and adds no clobber
+    st2 = led.release(led.init(), "rev", 0)
+    st2 = led.acquire(st2, "rev", 0)
+    st2 = led.release(st2, "rev", 0)
+    assert bool(led.window_safe(st2))
+
+
+def _replay_window_schedule(led, depth, n_steps, watch):
+    """Replay the deep-window pipeline's exact ledger transition sequence
+    (prologue, skew-one steps with release-at-fill, epilogue drain),
+    calling ``watch`` after every transition."""
+    st_ = led.init()
+    st_ = watch(led.release(st_, "fwd", 0))
+    st_ = watch(led.acquire(st_, "fwd", 0))
+    st_ = watch(led.release(st_, "rev", 0))
+    for k in range(1, n_steps):
+        st_ = watch(led.acquire(st_, "rev", k - 1))
+        st_ = watch(led.release(st_, "fwd", k))
+        st_ = watch(led.acquire(st_, "fwd", k))
+        st_ = watch(led.release(st_, "rev", k))
+    return watch(led.acquire(st_, "rev", n_steps - 1))
+
+
+@given(depth=st.integers(2, 6), n_steps=st.integers(1, 16),
+       n_pulses=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_ledger_window_replay_properties(depth, n_steps, n_pulses):
+    """For random (depth, n_steps): no acquire ever observes a slot
+    before its release, counters are monotone non-decreasing, and the
+    drain epilogue leaves zero in-flight slots and zero clobbers."""
+    led = SignalLedger(depth=depth, n_pulses=n_pulses)
+    seen = {"released": None, "acquired": None}
+
+    def watch(st_):
+        assert bool(led.consistent(st_))              # causal at all times
+        assert bool(led.window_safe(st_))             # ring never clobbers
+        # skew-one window: at most one kind's pulses in flight at once
+        assert int(led.in_flight(st_)) <= n_pulses
+        for name in seen:                             # monotone counters
+            cur = np.asarray(getattr(st_, name))
+            assert np.all(cur >= 0)
+            if seen[name] is not None:
+                assert np.all(cur >= seen[name])
+            seen[name] = cur
+        return st_
+
+    st_ = _replay_window_schedule(led, depth, n_steps, watch)
+    assert bool(led.drained(st_))                     # epilogue drains all
+    assert int(led.in_flight(st_)) == 0
+    s = led.summary(st_)
+    assert s["fwd"]["released"] == s["fwd"]["acquired"] == n_steps
+    assert s["rev"]["released"] == s["rev"]["acquired"] == n_steps
+
+
+@given(depth=st.integers(2, 4), extra=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_ledger_overdeep_window_is_flagged(depth, extra):
+    """Keeping more than ``depth`` deposits in flight MUST trip the
+    clobber monitor: releases wrap the ring onto unacquired slots."""
+    led = SignalLedger(depth=depth, n_pulses=1)
+    st_ = led.init()
+    for k in range(depth + extra):                    # no acquires at all
+        st_ = led.release(st_, "rev", k)
+    assert not bool(led.window_safe(st_))
+    assert bool(led.consistent(st_))                  # still causal
+
+
 # --------------------------------------------------------------------------
-# step pipeline: off == double_buffer, bit for bit
+# cross-backend conformance matrix: every (backend, mode, width, depth)
+# cell must reproduce the serialized/off reference bit for bit
 # --------------------------------------------------------------------------
+
+MATRIX_BACKENDS = ("serialized", "fused", "pallas", "signal")
+MATRIX_MODES = ("off", "double_buffer")
+MATRIX_WIDTHS = (1, 2)
+MATRIX_DEPTHS = (2, 3, 4)
+MATRIX_STEPS = 8     # 7 post-prologue steps: exercises rem != 0 at span 2/3
+
+MATRIX = [(b, m, w, d)
+          for b in MATRIX_BACKENDS
+          for m in MATRIX_MODES
+          for w in MATRIX_WIDTHS
+          for d in MATRIX_DEPTHS]
+
 
 def _toy_fns():
     def begin(state, f, ctx):
@@ -143,10 +246,16 @@ def _toy_fns():
     return StepFns(begin=begin, force=force, finish=finish)
 
 
-def _run_pipeline(mode, n_steps, backend="signal"):
+@functools.lru_cache(maxsize=None)
+def _run_cell(backend, mode, width, depth, n_steps=MATRIX_STEPS):
+    """One matrix cell (cached: ``off`` collapses the depth axis, and
+    reference cells are shared by every comparison against them)."""
+    if mode == "off":
+        depth = 2        # the serialized chain has no ring to deepen
     mesh = make_mesh((1,), ("z",))
-    plan = HaloPlan.build(HaloSpec(("z",), (2,), backend=backend), mesh)
-    pipe = StepPipeline.build(plan, _toy_fns(), mode=mode)
+    plan = HaloPlan.build(HaloSpec(("z",), (width,), backend=backend),
+                          mesh)
+    pipe = StepPipeline.build(plan, _toy_fns(), mode=mode, depth=depth)
     x0 = jnp.asarray(np.random.RandomState(0).randn(6, 4)
                      .astype(np.float32))
 
@@ -161,31 +270,53 @@ def _run_pipeline(mode, n_steps, backend="signal"):
             pipe.ledger.summary(jax.device_get(led)))
 
 
-@pytest.mark.parametrize("n_steps", (1, 2, 7))
-def test_pipeline_modes_bitwise_identical(n_steps):
-    ref = _run_pipeline("off", n_steps)
-    got = _run_pipeline("double_buffer", n_steps)
+@pytest.mark.parametrize(
+    "backend,mode,width,depth", MATRIX,
+    ids=[f"{b}-{m}-w{w}-d{d}" for b, m, w, d in MATRIX])
+def test_conformance_matrix(backend, mode, width, depth):
+    """Bitwise trajectory identity of every cell vs serialized/off, plus
+    the ledger conservation laws (balanced, causal, clobber-free,
+    drained) the hardware signal flags would enforce."""
+    ref = _run_cell("serialized", "off", width, 2)
+    got = _run_cell(backend, mode, width, depth)
     np.testing.assert_array_equal(got[0], ref[0])
     np.testing.assert_array_equal(got[1], ref[1])
     for k in ref[2]:
-        assert ref[2][k].shape[0] == n_steps
+        assert ref[2][k].shape[0] == MATRIX_STEPS
         np.testing.assert_array_equal(got[2][k], ref[2][k])
-
-
-@pytest.mark.parametrize("mode", PIPELINE_MODES)
-def test_pipeline_ledger_balances(mode):
-    _, _, _, summary = _run_pipeline(mode, 5)
-    assert summary["consistent"]
+    summary = got[3]
+    assert summary["consistent"] and summary["window_safe"]
+    assert summary["in_flight"] == 0 and summary["clobbers"] == 0
     for kind in ("fwd", "rev"):
-        assert summary[kind]["released"] == 5
-        assert summary[kind]["acquired"] == 5
+        assert summary[kind]["released"] == MATRIX_STEPS
+        assert summary[kind]["acquired"] == MATRIX_STEPS
 
 
-def test_pipeline_rejects_bad_mode():
+@pytest.mark.parametrize("n_steps", (1, 2, 3))
+@pytest.mark.parametrize("depth", (3, 4))
+def test_deep_window_short_blocks(depth, n_steps):
+    """Blocks shorter than the window: the whole run is prologue +
+    epilogue drain loop (n_full = 0), which must still match ``off``."""
+    ref = _run_cell("signal", "off", 1, 2, n_steps=n_steps)
+    got = _run_cell("signal", "double_buffer", 1, depth, n_steps=n_steps)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    for k in ref[2]:
+        np.testing.assert_array_equal(got[2][k], ref[2][k])
+    assert got[3]["in_flight"] == 0 and got[3]["window_safe"]
+
+
+def test_pipeline_rejects_bad_mode_and_depth():
     mesh = make_mesh((1,), ("z",))
     plan = HaloPlan.build(HaloSpec(("z",), (1,)), mesh)
     with pytest.raises(ValueError, match="unknown pipeline mode"):
         StepPipeline.build(plan, _toy_fns(), mode="triple")
+    with pytest.raises(ValueError, match="depth >= 2"):
+        StepPipeline.build(plan, _toy_fns(), mode="double_buffer",
+                           depth=1)
+    # "off" has no ring: depth is normalized away, not an error
+    assert StepPipeline.build(plan, _toy_fns(), mode="off",
+                              depth=7).depth == 1
 
 
 # --------------------------------------------------------------------------
@@ -203,6 +334,32 @@ def test_double_buffer_exposes_strictly_fewer_phases():
             off["exposed_phases_per_step"]
         assert off["overlapped_bytes_per_step"] == 0
         assert db["overlapped_bytes_per_step"] == db["total_bytes"]
+
+
+def test_overlap_model_depth_sweep_is_monotone():
+    """Deeper in-flight windows expose strictly fewer phases per step and
+    hide strictly more bytes, for every backend's critical-path model."""
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    for backend in ("serialized", "fused", "pallas", "signal"):
+        plan = HaloPlan.build(
+            HaloSpec(("z", "y", "x"), (1, 1, 1), backend=backend), mesh)
+        cells = [plan.stats((8, 8, 8), pipeline="double_buffer", depth=d)
+                 for d in (2, 3, 4, 5)]
+        exposed = [c["exposed_phases_per_step"] for c in cells]
+        hidden = [c["overlapped_bytes_per_step"] for c in cells]
+        assert exposed == sorted(exposed, reverse=True)
+        assert len(set(exposed)) == len(exposed)      # strictly decreasing
+        assert hidden == sorted(hidden)
+        assert all(c["overlap"]["depth"] == d
+                   for c, d in zip(cells, (2, 3, 4, 5)))
+        # depth 2 reproduces the legacy double-buffer accounting
+        assert cells[0]["overlapped_bytes_per_step"] == \
+            cells[0]["total_bytes"]
+        # hidden bytes never exceed what is exchanged
+        assert all(h < c["overlap"]["exchanged_bytes_per_step"]
+                   for h, c in zip(hidden, cells))
+    with pytest.raises(ValueError, match="depth >= 2"):
+        plan.stats((8, 8, 8), pipeline="double_buffer", depth=1)
 
 
 def test_latency_model_two_pulse_small_domain_regime():
@@ -263,9 +420,54 @@ def test_md_engine_overlap_stats_and_validation():
     mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
     with pytest.raises(ValueError, match="unknown pipeline"):
         MDEngine(sys_, mesh, pipeline="buffered")
+    with pytest.raises(ValueError, match="pipeline_depth must be >= 2"):
+        MDEngine(sys_, mesh, pipeline="double_buffer", pipeline_depth=1)
     with pytest.raises(ValueError, match="widths must be >= 1"):
         MDEngine(sys_, mesh, HaloSpec(("z", "y", "x"), (1, 0, 1)))
     eng = MDEngine(sys_, mesh, pipeline="double_buffer")
     ov = eng.overlap_stats()
     assert ov["pipeline"] == "double_buffer"
     assert ov["overlapped_bytes_per_step"] > 0
+    deep = MDEngine(sys_, mesh, pipeline="double_buffer",
+                    pipeline_depth=4)
+    assert deep.pipeline.depth == 4
+    assert deep.overlap_stats()["depth"] == 4
+    assert deep.overlap_stats()["exposed_phases_per_step"] < \
+        ov["exposed_phases_per_step"]
+
+
+def test_md_engine_deep_window_and_overlap_rebin_bitwise():
+    """24 steps (one rebin/migration boundary at nstlist=20): deep
+    windows and the fused rebin path must all reproduce the
+    host-dispatched serialized/off trajectory bit for bit."""
+    from repro.core.md import MDEngine, make_grappa_like
+
+    sys_ = make_grappa_like(200, seed=5)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    spec = HaloSpec(("z", "y", "x"), (1, 1, 1), backend="serialized")
+    ref_eng = MDEngine(sys_, mesh, spec)
+    (cf_ref, ci_ref), m_ref, diags_ref = ref_eng.simulate(24)
+
+    cases = [
+        dict(pipeline="double_buffer", pipeline_depth=3),
+        dict(pipeline="off", overlap_rebin=True),
+        dict(pipeline="double_buffer", pipeline_depth=4,
+             overlap_rebin=True),
+    ]
+    for kw in cases:
+        eng = MDEngine(
+            sys_, mesh,
+            HaloSpec(("z", "y", "x"), (1, 1, 1), backend="signal"), **kw)
+        (cf, ci), m, diags = eng.simulate(24)
+        np.testing.assert_array_equal(np.asarray(jax.device_get(cf)),
+                                      np.asarray(jax.device_get(cf_ref)))
+        np.testing.assert_array_equal(np.asarray(jax.device_get(ci)),
+                                      np.asarray(jax.device_get(ci_ref)))
+        for k in m_ref:
+            np.testing.assert_array_equal(np.asarray(m[k]),
+                                          np.asarray(m_ref[k]))
+        assert len(diags) == len(diags_ref)          # same rebin cadence
+        for got_d, ref_d in zip(diags, diags_ref):
+            for k in ref_d:
+                np.testing.assert_array_equal(np.asarray(got_d[k]),
+                                              np.asarray(ref_d[k]))
