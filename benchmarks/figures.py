@@ -212,11 +212,15 @@ def nb_bench(smoke: bool = False):
     Sweeps force backends across mesh shapes (device counts) and
     occupancy fractions (capacity safety factors: occupied fraction of a
     cell's K slots is ~1/safety), recording step wall-time, evaluated
-    slot pairs, prune ratio, and pairs/s per cell.  The checked-in
-    ``results/BENCH_nb.json`` is the perf baseline future PRs must beat;
-    the summary asserts the headline claim — >= 2x fewer evaluated slot
-    pairs at the default 2.2 safety.  ``smoke`` (CI) runs the single
-    1-device cell set in interpret mode.
+    slot pairs, prune ratio, and pairs/s per cell; the sparse backend is
+    additionally run with the rolling dual pair list (``--nstprune 5``)
+    so the per-pair-bound tier ladders AND the rolling-prune schedule
+    each get a column.  The checked-in ``results/BENCH_nb.json`` is the
+    perf baseline future PRs must beat; the summary asserts two claims —
+    >= 2x fewer evaluated slot pairs than dense at the default 2.2
+    safety, and the tier ladders never exceeding the old global-k_exec
+    single-rectangle accounting (``per_pair_bound_gain >= 1``).
+    ``smoke`` (CI) runs the single 1-device cell set in interpret mode.
 
     Both modes (over)write ``results/BENCH_nb.json`` with a ``smoke``
     flag in the record: the checked-in baseline is the ``--full`` sweep —
@@ -225,19 +229,24 @@ def nb_bench(smoke: bool = False):
     """
     cfgs = [(1, 600, 8)] if smoke else [(1, 600, 20), (8, 1800, 12)]
     safeties = [2.2] if smoke else [2.2, 3.3]
-    backends = ("dense", "sparse", "pallas")
+    # (force_backend, nstprune) variants; key names the summary column
+    variants = (("dense", 0), ("sparse", 0), ("sparse", 5), ("pallas", 0))
     cells = []
     for devices, n_atoms, steps in cfgs:
         for safety in safeties:
-            for fb in backends:
-                tag = f"nb/{devices}dev/{n_atoms}atoms/s{safety:g}/{fb}"
+            for fb, nstprune in variants:
+                key = fb + (f"-np{nstprune}" if nstprune else "")
+                tag = f"nb/{devices}dev/{n_atoms}atoms/s{safety:g}/{key}"
+                extra = ["--nstprune", str(nstprune)] if nstprune else []
                 try:
                     r = run_sub("md_worker.py", "fused", str(n_atoms),
                                 str(steps), "--force-backend", fb,
-                                "--safety", str(safety), devices=devices)
+                                "--safety", str(safety), *extra,
+                                devices=devices)
                 except RuntimeError as e:
                     emit(tag, -1, f"error={str(e)[:60]}")
                     continue
+                r["variant"] = key
                 cells.append(r)
                 emit(tag, r["ms_per_step"] * 1e3,
                      f"slot_pairs={r['evaluated_slot_pairs_per_step']};"
@@ -247,35 +256,51 @@ def nb_bench(smoke: bool = False):
     summary = []
     for devices, n_atoms, _ in cfgs:
         for safety in safeties:
-            sub = {c["force_backend"]: c for c in cells
+            sub = {c["variant"]: c for c in cells
                    if c["devices"] == devices and c["n_atoms"] == n_atoms
                    and c["capacity_safety"] == safety}
             if "dense" not in sub or "sparse" not in sub:
                 continue
+            sparse = sub["sparse"]
             row = {
                 "devices": devices, "n_atoms": n_atoms, "safety": safety,
                 "slot_pair_reduction":
                     sub["dense"]["evaluated_slot_pairs_per_step"]
-                    / max(sub["sparse"]["evaluated_slot_pairs_per_step"],
-                          1),
+                    / max(sparse["evaluated_slot_pairs_per_step"], 1),
                 "sparse_step_speedup":
                     sub["dense"]["ms_per_step"]
-                    / max(sub["sparse"]["ms_per_step"], 1e-9),
+                    / max(sparse["ms_per_step"], 1e-9),
+                # per-pair slot bounds vs the old global-k_exec rectangle
+                "global_kexec_slot_pairs":
+                    sparse.get("global_kexec_slot_pairs_per_step"),
+                "per_pair_bound_gain":
+                    sparse.get("per_pair_bound_gain"),
             }
+            if "sparse-np5" in sub:
+                roll = sub["sparse-np5"]
+                row["rolling_prune_slot_pairs"] = \
+                    roll["evaluated_slot_pairs_per_step"]
+                row["rolling_prune_overflow_blocks"] = \
+                    roll.get("inner_overflow_blocks")
             summary.append(row)
             emit(f"nb/{devices}dev/{n_atoms}atoms/s{safety:g}/reduction",
                  0.0, f"slot_pairs={row['slot_pair_reduction']:.2f}x;"
-                 f"step_speedup={row['sparse_step_speedup']:.2f}x")
+                 f"step_speedup={row['sparse_step_speedup']:.2f}x;"
+                 f"bound_gain={row['per_pair_bound_gain']}")
     default = [r for r in summary if r["safety"] == 2.2]
     ok = bool(default) and all(r["slot_pair_reduction"] >= 2.0
                                for r in default)
+    ok_bounds = bool(default) and all(
+        (r.get("per_pair_bound_gain") or 0) >= 1.0 for r in default)
     out = {
         "suite": "nb", "smoke": smoke, "cells": cells, "summary": summary,
         "target_2x_at_default_safety": ok,
+        "per_pair_bounds_beat_global_kexec": ok_bounds,
     }
     path = RESULTS / "BENCH_nb.json"
     path.write_text(json.dumps(out, indent=1))
     emit("nb/target_2x_at_default_safety", 0.0, str(ok))
+    emit("nb/per_pair_bounds_beat_global_kexec", 0.0, str(ok_bounds))
 
 
 ALL = {

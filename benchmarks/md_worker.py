@@ -6,15 +6,17 @@ Usage (positional args kept for benchmarks/figures.py compatibility):
       [--pipeline {off,double_buffer}] [--pipeline-depth D]
       [--overlap-rebin] [--halo-width N]
       [--halo-pulses N] [--force-backend {dense,sparse,pallas}]
-      [--safety F] [--out results/dryrun]
+      [--safety F] [--nstprune N] [--inner-radius R]
+      [--out results/dryrun]
 
 Emits one JSON record with per-step timing plus the plan's overlap model
 (``overlapped_bytes``, ``exposed_phases`` at the chosen window depth),
 the alpha-beta latency model (``modeled_*``, for the modeled-vs-measured
 figures), and the force engine's evaluated-work accounting
-(``prune_ratio``, ``pairs_per_s``); with ``--out`` the record is also
-written to ``<out>/md__<backend>__<n>__<pipeline>[__dD][__or][__wW]
-[__pP][__fbB][__sS].json``.
+(``prune_ratio``, ``pairs_per_s``, the per-pair-bound tier ladders and
+the rolling-prune columns); with ``--out`` the record is also written to
+``<out>/md__<backend>__<n>__<pipeline>[__dD][__or][__wW][__pP][__fbB]
+[__sS][__npN].json``.
 """
 import argparse
 import json
@@ -48,6 +50,12 @@ def main():
                     help="NB force engine (pair_schedule registry)")
     ap.add_argument("--safety", type=float, default=2.2,
                     help="cell capacity safety factor (occupancy sweep)")
+    ap.add_argument("--nstprune", type=int, default=0,
+                    help="rolling inner-prune cadence (dual pair list; "
+                         "0 = outer list only)")
+    ap.add_argument("--inner-radius", type=float, default=None,
+                    help="inner cutoff of the rolling prune (default: "
+                         "r_cut + 3-sigma drift over nstprune steps)")
     ap.add_argument("--out", default=None,
                     help="directory for the JSON record (e.g. "
                          "results/dryrun)")
@@ -64,7 +72,9 @@ def main():
                    pipeline_depth=args.pipeline_depth,
                    overlap_rebin=args.overlap_rebin,
                    force_backend=args.force_backend,
-                   capacity_safety=args.safety)
+                   capacity_safety=args.safety,
+                   nstprune=args.nstprune,
+                   inner_radius=args.inner_radius)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
     t0 = time.perf_counter()
@@ -113,11 +123,23 @@ def main():
         "modeled_serialized_s": lat["serialized_time_s"],
         "modeled_fused_s": lat["fused_time_s"],
         "modeled_speedup": lat["fused_speedup"],
-        # force engine: evaluated-work accounting (pair_schedule)
+        # force engine: evaluated-work accounting (pair_schedule) — the
+        # tier ladders are the per-pair slot bounds, global_kexec_* the
+        # old single-rectangle accounting the ladders improve on, and
+        # the *_inner columns the rolling dual pair list's schedule
         "force_backend": args.force_backend,
         "capacity_safety": args.safety,
+        "nstprune": args.nstprune,
+        "inner_radius": pair.get("inner_radius"),
         "prune_ratio": pair["prune_ratio"],
         "evaluated_slot_pairs_per_step": pair["evaluated_slot_pairs"],
+        "outer_slot_pairs_per_step": pair.get("outer_slot_pairs"),
+        "global_kexec_slot_pairs_per_step":
+        pair.get("global_kexec_slot_pairs"),
+        "per_pair_bound_gain": pair.get("per_pair_bound_gain"),
+        "tiers": pair.get("tiers"),
+        "tiers_inner": pair.get("tiers_inner"),
+        "inner_overflow_blocks": pair.get("inner_overflow_blocks"),
         "dense_slot_pairs_per_step": pair["dense_slot_pairs"],
         "pairs_per_s": pair["evaluated_slot_pairs"] * n_dev / dt,
     }
@@ -138,6 +160,8 @@ def main():
             name += f"__fb{args.force_backend}"
         if args.safety != 2.2:
             name += f"__s{args.safety:g}"
+        if args.nstprune:
+            name += f"__np{args.nstprune}"
         (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
 
 

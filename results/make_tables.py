@@ -146,8 +146,10 @@ def halo_table():
 
 def nb_table():
     """Force-engine bench (results/BENCH_nb.json): dense vs sparse vs
-    pallas pair schedules, with the prune ratio (dense-over-evaluated
-    slot pairs) per cell — the ``benchmarks/run.py --suite nb`` output.
+    pallas pair schedules — tier-ladder (per-pair slot bound) and
+    rolling-prune (dual pair list) columns included — with the prune
+    ratio (dense-over-evaluated slot pairs) per cell; the
+    ``benchmarks/run.py --suite nb`` output.
     """
     p = Path(__file__).parent / "BENCH_nb.json"
     if not p.exists():
@@ -158,52 +160,70 @@ def nb_table():
     mode = "SMOKE (CI-sized — not the baseline; regenerate with " \
         "`--suite nb --full`)" if r.get("smoke") else "full sweep"
     print(f"\nsuite mode: {mode}")
-    print("\n| dev | atoms | safety | force backend | step ms | "
-          "slot pairs/step | prune ratio | pairs/s |")
-    print("|" + "---|" * 8)
+    print("\n| dev | atoms | safety | variant | step ms | "
+          "slot pairs/step | global-kexec pairs | tiers | prune ratio | "
+          "pairs/s |")
+    print("|" + "---|" * 10)
     for c in r["cells"]:
+        tiers = c.get("tiers_inner") or c.get("tiers")
+        tiers_s = "-" if not tiers else \
+            " ".join(f"{n}x{k}" for n, k in tiers)
+        gk = c.get("global_kexec_slot_pairs_per_step")
         print(f"| {c['devices']} | {c['n_atoms']} | "
-              f"{c['capacity_safety']:g} | {c['force_backend']} | "
+              f"{c['capacity_safety']:g} | "
+              f"{c.get('variant', c['force_backend'])} | "
               f"{c['ms_per_step']:.2f} | "
               f"{c['evaluated_slot_pairs_per_step']} | "
+              f"{gk if gk is not None else '-'} | {tiers_s} | "
               f"{c['prune_ratio']:.2f}x | {c['pairs_per_s']:.3e} |")
     print("\n| dev | atoms | safety | slot-pair reduction | "
+          "per-pair-bound gain | rolling-prune pairs | "
           "sparse step speedup |")
-    print("|" + "---|" * 5)
+    print("|" + "---|" * 7)
     for s in r.get("summary", []):
+        gain = s.get("per_pair_bound_gain")
+        roll = s.get("rolling_prune_slot_pairs")
         print(f"| {s['devices']} | {s['n_atoms']} | {s['safety']:g} | "
               f"{s['slot_pair_reduction']:.2f}x | "
+              f"{'-' if gain is None else f'{gain:.2f}x'} | "
+              f"{'-' if roll is None else roll} | "
               f"{s['sparse_step_speedup']:.2f}x |")
     print(f"\n>= 2x slot-pair reduction at default 2.2 safety: "
           f"{r.get('target_2x_at_default_safety')}")
+    print(f"per-pair bounds beat global-k_exec at default safety: "
+          f"{r.get('per_pair_bounds_beat_global_kexec')}")
 
 
 def force_table():
     """MD force-engine dry-run cells (mdforce__*.json): chosen backend +
-    prune ratio as recorded by ``repro.launch.dryrun --md``."""
+    prune ratio / tier ladders as recorded by
+    ``repro.launch.dryrun --md``."""
     files = sorted(DRY.glob("mdforce__*.json"))
     if not files:
         return
     print("\n| dd | halo backend | force backend | pipe | depth | "
-          "ovl rebin | prune ratio | slot pairs/step | occupancy | "
-          "index B | useful B |")
-    print("|" + "---|" * 11)
+          "ovl rebin | nstprune | prune ratio | slot pairs/step | "
+          "tiers | occupancy | index B | useful B |")
+    print("|" + "---|" * 13)
     for p in files:
         r = json.loads(p.read_text())
         if not r.get("ok"):
             print(f"| {r.get('dd', '?')} | {r.get('backend', '?')} | "
                   f"{r.get('force_backend', '?')} | FAIL "
-                  f"{r.get('error', '')[:40]} |" + " |" * 7)
+                  f"{r.get('error', '')[:40]} |" + " |" * 9)
             continue
         ps = r["pair_stats"]
         hs = r["halo_stats"]
         pipe = r.get("pipeline", "off")
         depth = r.get("pipeline_depth", "-") if pipe != "off" else "-"
         ovr = "yes" if r.get("overlap_rebin") else "no"
+        tiers = ps.get("tiers_inner") or ps.get("tiers")
+        tiers_s = "-" if not tiers else \
+            " ".join(f"{n}x{k}" for n, k in tiers)
         print(f"| {r['dd']} | {r['backend']} | {r['force_backend']} | "
-              f"{pipe} | {depth} | {ovr} | "
+              f"{pipe} | {depth} | {ovr} | {r.get('nstprune', 0)} | "
               f"{ps['prune_ratio']:.2f}x | "
-              f"{ps['evaluated_slot_pairs']} | "
+              f"{ps['evaluated_slot_pairs']} | {tiers_s} | "
               f"{hs['occupancy']:.3f} | {hs['bytes_index']} | "
               f"{hs['useful_bytes']} |")
 

@@ -132,6 +132,19 @@ def cell_counts(cell_i) -> jnp.ndarray:
     return jnp.sum(cell_i[..., 0] >= 0, axis=-1).astype(jnp.int32)
 
 
+def cell_levels(counts, quantum: int) -> jnp.ndarray:
+    """Quantized per-cell occupancy levels: ``ceil(count / quantum)``.
+
+    Level 0 marks empty cells.  The pair schedule's per-pair slot bound is
+    the max of the two cells' levels, so a cell-pair batch executed at
+    ``level * quantum`` slots covers every occupied slot of both cells
+    (binning packs atoms into a contiguous slot prefix — see
+    ``bin_to_cells`` / ``cell_counts``).
+    """
+    q = jnp.asarray(quantum, counts.dtype)
+    return ((counts + q - 1) // q).astype(jnp.int32)
+
+
 def cell_bounds(pos, cell_i, big: float = 1e30):
     """Per-cell position bounding boxes over valid slots.
 

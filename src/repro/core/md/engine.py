@@ -32,6 +32,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
+import warnings
 from typing import Dict, Tuple
 
 import jax
@@ -53,11 +55,13 @@ from repro.core.md.pair_schedule import (
     PairSchedule,
     force_backends,
     get_force_backend,
+    inner_radius as default_inner_radius,
     probe_pallas,
     prune_local,
     prune_radius,
+    roll_prune,
 )
-from repro.core.md.schedule_opt import bucket
+from repro.core.md.schedule_opt import bucket, tier_cum, tier_plan, tier_rows
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
 from repro.core.pipeline import PIPELINE_MODES, StepFns, StepPipeline
@@ -86,7 +90,25 @@ class MDEngine:
     cell-pair schedule (rebuilt every rebin, off the hot path) and match
     dense to tolerance.  ``capacity_safety`` is the per-cell slot
     headroom factor fed to :func:`choose_layout` — the padding the
-    pruned backends stop paying for.
+    pruned backends stop paying for.  Degenerate layouts with a single
+    global cell along any dim (a halo cell would alias its own periodic
+    image) degrade to the dense backend with a warning instead of
+    erroring.
+
+    ``nstprune`` switches the pruned backends to GROMACS' **dual pair
+    list**: the rebin-cadence prune builds the outer list at the
+    Verlet-buffer radius, and every ``nstprune`` steps *inside* the
+    block program a rolling prune re-partitions it with current
+    coordinates at ``inner_radius`` (default
+    :func:`repro.core.md.pair_schedule.inner_radius`: ``r_cut`` plus
+    TWICE the 3-sigma drift over ``nstprune`` steps — both pair members
+    move, same convention as the outer radius), so the evaluated tier
+    ladder shrinks between rebins with no host round-trips.  The inner
+    ladder is sized from the rebin-time histogram times
+    ``inner_safety``; a refresh that outgrows it is counted
+    (``pair_stats()["inner_overflow_blocks"]``), reported once as a
+    warning, and the next block conservatively falls back to the outer
+    ladder.
     """
 
     def __init__(self, system: MDSystem, mesh: Mesh,
@@ -95,7 +117,11 @@ class MDEngine:
                  pipeline: str = "off", pipeline_depth: int = 2,
                  overlap_rebin: bool = False,
                  force_backend: str = "dense",
-                 capacity_safety: float = 2.2):
+                 capacity_safety: float = 2.2,
+                 nstprune: int = 0,
+                 inner_radius: float | None = None,
+                 inner_safety: float = 1.5,
+                 pair_bucket: int = PAIR_BUCKET):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -113,21 +139,58 @@ class MDEngine:
         if force_backend not in force_backends():
             raise ValueError(f"unknown force backend {force_backend!r}; "
                              f"available: {force_backends()}")
+        if int(nstprune) < 0:
+            raise ValueError("nstprune must be >= 0 (0 disables the "
+                             "rolling inner prune)")
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
         self.pipeline_depth = int(pipeline_depth)
         self.overlap_rebin = bool(overlap_rebin)
-        self.force_backend = force_backend
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
         self.layout = choose_layout(system.box, mesh_shape, r_list,
                                     system.n_atoms, safety=capacity_safety)
+        if force_backend != "dense" and min(self.layout.global_cells) < 2:
+            # tiny-box path: a pair schedule cannot distinguish a halo
+            # cell from its own periodic image here; fall back to the
+            # dense engine (which masks self-image pairs by atom id)
+            warnings.warn(
+                f"layout {self.layout.global_cells} has a single global "
+                f"cell along some dim; the {force_backend!r} pair "
+                "schedule degrades to the 'dense' force backend",
+                RuntimeWarning, stacklevel=2)
+            force_backend = "dense"
+        self.force_backend = force_backend
+        if force_backend == "dense":
+            nstprune = 0               # dual list rides the pair schedule
+        self.nstprune = int(nstprune)
+        self.inner_safety = float(inner_safety)
+        # pair-count quantum of the tier ladders: smaller = tighter exec
+        # shapes (more distinct compiled block programs), larger = fewer
+        # recompiles; PAIR_BUCKET is the production default
+        self.pair_bucket = max(int(pair_bucket), 1)
+        if self.nstprune:
+            self.r_inner = float(
+                default_inner_radius(system.params, self.nstprune)
+                if inner_radius is None else inner_radius)
+            if self.r_inner < system.params.ff.r_cut:
+                raise ValueError(
+                    f"inner_radius {self.r_inner} < r_cut "
+                    f"{system.params.ff.r_cut}: the rolling prune would "
+                    "drop interacting pairs outright")
+        else:
+            self.r_inner = None
         self.axis_sizes = mesh_shape
         self.mig_cap = max(64, int(self.layout.pool * mig_frac))
         self.pair_schedule = None
         self.r_prune = prune_radius(system.params)
-        self._sched_exec = None       # (sel, n_exec, k_exec) of last prune
+        self._sched_exec = None     # (sel, tiers, tiers_inner) of last prune
+        self._inner_overflows = 0   # blocks whose refresh outgrew the ladder
+        # per-block (outer_rows, inner_rows) ladder sizes — the dual
+        # list's activity trace (inner < outer = the rolling prune is
+        # actually shrinking the evaluated schedule that block)
+        self.sched_history: list[tuple[int, int]] = []
         if force_backend != "dense":
             self.pair_schedule = PairSchedule.build(self.layout)
             self._pair_stats = self.pair_schedule.slot_pair_stats()
@@ -198,6 +261,10 @@ class MDEngine:
         failed and is actually running the jnp twin.
         """
         out = dict(self._pair_stats)
+        if self.nstprune:
+            # live counter, not the last _bucket_exec's snapshot: a
+            # final block's overflow has no further rebin to record it
+            out["inner_overflow_blocks"] = self._inner_overflows
         if self.force_backend == "pallas":
             from repro.core.md.pair_schedule import pallas_fallback_active
             out["pallas_fallback"] = pallas_fallback_active()
@@ -242,7 +309,7 @@ class MDEngine:
         f_local = self.plan.rev_local(self._pad_force(F_trim, ext_f.shape))
         return f_local, lax.psum(pe, AXES)
 
-    def _force_pass_sched(self, cell_f, cell_i, sel, n_exec, k_exec):
+    def _force_pass_sched(self, cell_f, cell_i, sel, tiers):
         """Schedule-driven force pass (device-local, pruned backends)."""
         ext_f = self.plan.fwd_local(cell_f[..., :4])
         ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
@@ -250,8 +317,8 @@ class MDEngine:
         F_trim, pe = backend_fn(
             self._trim_ext(ext_f), self._trim_ext(ext_i), self.layout,
             self.system.params.ff, sched=self.pair_schedule,
-            sel=lax.slice(sel.reshape(-1), (0,), (n_exec,)),
-            k_exec=k_exec, interpret=self.spec.interpret)
+            sel=lax.slice(sel.reshape(-1), (0,), (tier_rows(tiers),)),
+            tiers=tiers, interpret=self.spec.interpret)
         f_local = self.plan.rev_local(self._pad_force(F_trim, ext_f.shape))
         return f_local, lax.psum(pe, AXES)
 
@@ -263,9 +330,11 @@ class MDEngine:
         ``ctx`` carries the block-constant arrays: ``cell_i`` (atom
         ids/types never change within a block — migration runs between
         blocks), its pre-exchanged extension ``ext_i``, and — for the
-        pruned force backends — the block's pair schedule (``pair_sel``
-        surviving-pair prefix + static ``k_exec`` slot depth), so both
-        pipeline modes execute the same worklist.
+        pruned force backends — the current pair schedule (``pair_sel``
+        packed-pair prefix + the static ``tiers`` ladder), so both
+        pipeline modes execute the same worklist.  With the rolling
+        inner prune the engine swaps ``pair_sel``/``tiers`` between
+        sub-blocks; each sub-block's ctx is still block-constant.
         """
         params = self.system.params
         mass, dt = params.mass, params.dt
@@ -278,7 +347,7 @@ class MDEngine:
                 return compute_forces(ext_f_trim, ext_i_trim, layout, ff)
             return backend_fn(ext_f_trim, ext_i_trim, layout, ff,
                               sched=sched, sel=ctx["pair_sel"],
-                              k_exec=ctx["k_exec"], interpret=interp)
+                              tiers=ctx["tiers"], interpret=interp)
 
         def begin(cell_f, force, ctx):
             valid = ctx["cell_i"][..., 0] >= 0
@@ -334,14 +403,59 @@ class MDEngine:
                 cell_f, force, n_steps, ctx)
             return cell_f, cell_i, f_last, metrics
 
-        def block_sched(cell_f, cell_i, force, sel, n_steps, n_exec,
-                        k_exec):
+        def block_sched(cell_f, cell_i, force, sel, n_steps, tiers,
+                        tiers_inner):
+            """Pruned-backend block; ``tiers``/``tiers_inner`` static.
+
+            With an inner ladder the block is a python-unrolled chain of
+            ``nstprune``-step sub-blocks: each starts with the rolling
+            prune (current-coordinate re-partition of the outer prefix,
+            :func:`repro.core.md.pair_schedule.roll_prune`) and runs the
+            step pipeline over the inner ladder only.  The returned
+            overflow scalar counts survivors the static ladder could not
+            seat (0 = the inner approximation held).
+            """
             ctx = self._block_ctx(cell_i)
-            ctx["pair_sel"] = lax.slice(sel.reshape(-1), (0,), (n_exec,))
-            ctx["k_exec"] = k_exec
-            cell_f, f_last, metrics, _led = self.pipeline.run_local(
-                cell_f, force, n_steps, ctx)
-            return cell_f, cell_i, f_last, metrics
+            sel_flat = sel.reshape(-1)
+            zero = jnp.zeros((), jnp.int32)
+            if not tiers_inner:
+                ctx["pair_sel"] = lax.slice(sel_flat, (0,),
+                                            (tier_rows(tiers),))
+                ctx["tiers"] = tiers
+                cell_f, f_last, metrics, _led = self.pipeline.run_local(
+                    cell_f, force, n_steps, ctx)
+                return cell_f, cell_i, f_last, metrics, zero
+            L = self.pair_schedule.levels
+            budget = jnp.asarray(tier_cum(tiers_inner, SLOT_QUANTUM, L),
+                                 jnp.int32)
+            n_inner = tier_rows(tiers_inner)
+            sel_exec = lax.slice(sel_flat, (0,), (tier_rows(tiers),))
+            overflow, f_cur, chunks, done = zero, force, [], 0
+            while done < n_steps:
+                take = min(self.nstprune, n_steps - done)
+                # the done=0 refresh re-derives the inner partition the
+                # boundary prune already saw (same coordinates) — kept
+                # deliberately: sel stays outer-packed so force_fn /
+                # the outer-ladder fallback remain valid on it, and the
+                # cost is one exchange + sort per nstlist block, off
+                # the per-step path
+                ext_f = self.plan.fwd_local(cell_f[..., :4])
+                sel_exec, cum_s = roll_prune(
+                    self.pair_schedule, sel_exec, self._trim_ext(ext_f),
+                    ctx["ext_i_trim"], self.r_inner)
+                overflow = jnp.maximum(
+                    overflow, jnp.max(jnp.maximum(cum_s - budget, 0)))
+                ctx_s = dict(ctx)
+                ctx_s["pair_sel"] = lax.slice(sel_exec, (0,), (n_inner,))
+                ctx_s["tiers"] = tiers_inner
+                cell_f, f_cur, m, _led = self.pipeline.run_local(
+                    cell_f, f_cur, take, ctx_s)
+                chunks.append(m)
+                done += take
+            metrics = {k: jnp.concatenate([c[k] for c in chunks])
+                       for k in chunks[0]}
+            return (cell_f, cell_i, f_cur, metrics,
+                    lax.pmax(overflow, AXES))
 
         def do_rebin(cell_f, cell_i):
             new_f, new_i, diag = rebin(cell_f, cell_i, layout, mig_cap)
@@ -352,14 +466,16 @@ class MDEngine:
         def do_prune(cell_f, cell_i):
             ext_f = self.plan.fwd_local(cell_f[..., :4])
             ext_i = self.plan.fwd_local(cell_i, wrap_shift=None)
-            sel, n_keep, occ = prune_local(
+            sel, cum, cum_inner, occ = prune_local(
                 self.pair_schedule, self._trim_ext(ext_f),
-                self._trim_ext(ext_i), self.r_prune)
+                self._trim_ext(ext_i), self.r_prune,
+                r_inner=self.r_inner)
             # the exec shapes must agree across the SPMD mesh: every
             # domain sizes to the global worst case
-            n_keep = lax.pmax(n_keep, AXES)
+            cum = lax.pmax(cum, AXES)
+            cum_inner = lax.pmax(cum_inner, AXES)
             occ = lax.pmax(occ, AXES)
-            return sel[None, None, None], n_keep, occ
+            return sel[None, None, None], cum, cum_inner, occ
 
         # overlap_rebin: the nstlist-cadence DLB work (migration gather +
         # occupancy/bbox prune) fused into the block program's final
@@ -374,15 +490,15 @@ class MDEngine:
             new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
             return new_f, new_i, force, metrics, diag
 
-        def block_sched_rebin(cell_f, cell_i, force, sel, n_steps, n_exec,
-                              k_exec):
-            cell_f, cell_i, _f_last, metrics = block_sched(
-                cell_f, cell_i, force, sel, n_steps, n_exec, k_exec)
+        def block_sched_rebin(cell_f, cell_i, force, sel, n_steps, tiers,
+                              tiers_inner):
+            cell_f, cell_i, _f_last, metrics, ovf = block_sched(
+                cell_f, cell_i, force, sel, n_steps, tiers, tiers_inner)
             cell_f, cell_i = lax.optimization_barrier((cell_f, cell_i))
             new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
-            sel2, n_keep, occ = do_prune(new_f, new_i)
-            return (new_f, new_i, force, metrics, diag, sel2, n_keep,
-                    occ)
+            sel2, cum, cum_inner, occ = do_prune(new_f, new_i)
+            return (new_f, new_i, force, metrics, diag, sel2, cum,
+                    cum_inner, occ, ovf)
 
         spec = self._spec
         self.block_fn = jax.jit(
@@ -414,20 +530,20 @@ class MDEngine:
                 shard_map_norep(
                     block_sched, mesh=self.mesh,
                     in_specs=(spec, spec, spec, spec, None, None, None),
-                    out_specs=(spec, spec, spec, P()),
+                    out_specs=(spec, spec, spec, P(), P()),
                 ),
                 static_argnums=(4, 5, 6),
             )
             self.prune_fn = jax.jit(shard_map_norep(
                 do_prune, mesh=self.mesh, in_specs=(spec, spec),
-                out_specs=(spec, P(), P())))
+                out_specs=(spec, P(), P(), P())))
             self._force_fn_sched = jax.jit(
                 shard_map_norep(
                     self._force_pass_sched, mesh=self.mesh,
-                    in_specs=(spec, spec, spec, None, None),
+                    in_specs=(spec, spec, spec, None),
                     out_specs=(spec, P()),
                 ),
-                static_argnums=(3, 4),
+                static_argnums=(3,),
             )
             if self.overlap_rebin:
                 self.block_sched_rebin_fn = jax.jit(
@@ -436,7 +552,7 @@ class MDEngine:
                         in_specs=(spec, spec, spec, spec, None, None,
                                   None),
                         out_specs=(spec, spec, spec, P(), P(), spec,
-                                   P(), P()),
+                                   P(), P(), P(), P()),
                     ),
                     static_argnums=(4, 5, 6),
                 )
@@ -452,8 +568,8 @@ class MDEngine:
             return self._force_fn_dense(cell_f, cell_i)
         if self._sched_exec is None:
             self._refresh_schedule(cell_f, cell_i)
-        sel, n_exec, k_exec = self._sched_exec
-        return self._force_fn_sched(cell_f, cell_i, sel, n_exec, k_exec)
+        sel, tiers, _tiers_inner = self._sched_exec
+        return self._force_fn_sched(cell_f, cell_i, sel, tiers)
 
     # ---- state init ----------------------------------------------------------
 
@@ -489,32 +605,76 @@ class MDEngine:
 
     # ---- drivers ---------------------------------------------------------------
 
-    def _refresh_schedule(self, cell_f, cell_i):
+    def _refresh_schedule(self, cell_f, cell_i, disable_inner: bool = False):
         """Re-prune the pair worklist for the next block (nstlist cadence).
 
         Runs right after ``rebin_fn`` — the same off-hot-path slot as the
-        migration/NS program (paper §5.4).  The host reads two scalars
-        (global surviving-pair count, global max cell occupancy) and
-        buckets them into the static exec shapes of the block program.
+        migration/NS program (paper §5.4).  The host reads the global
+        per-level pair histograms + max occupancy and buckets them into
+        the static tier ladders of the block program.
         """
         if self.force_backend == "dense":
             return None
-        sel, n_keep, occ = self.prune_fn(cell_f, cell_i)
-        return self._bucket_exec(sel, n_keep, occ)
+        sel, cum, cum_inner, occ = self.prune_fn(cell_f, cell_i)
+        return self._bucket_exec(sel, cum, cum_inner, occ,
+                                 disable_inner=disable_inner)
 
-    def _bucket_exec(self, sel, n_keep, occ):
-        """Host half of the prune: read the two global scalars and bucket
-        them into the static exec shapes of the next block program (shared
-        by the host-dispatched and ``overlap_rebin``-fused prunes)."""
-        n_keep = int(jax.device_get(n_keep))
+    def _bucket_exec(self, sel, cum, cum_inner, occ,
+                     disable_inner: bool = False):
+        """Host half of the prune: read the global histograms and bucket
+        them into the static tier ladders of the next block program
+        (shared by the host-dispatched and ``overlap_rebin``-fused
+        prunes).  ``disable_inner`` is the overflow fallback — one block
+        on the outer ladder after a refresh outgrew the inner one."""
+        M = self.pair_schedule.n_pairs
+        K = self.layout.capacity
+        cum = [int(v) for v in jax.device_get(cum)]
+        cum_inner = [int(v) for v in jax.device_get(cum_inner)]
         occ = int(jax.device_get(occ))
-        n_exec = bucket(n_keep, PAIR_BUCKET, self.pair_schedule.n_pairs)
-        k_exec = bucket(occ, SLOT_QUANTUM, self.layout.capacity)
+        tiers = tier_plan(cum, self.pair_bucket, M, SLOT_QUANTUM, K)
+        tiers_inner = ()
+        if self.nstprune and not disable_inner:
+            # inner ladder: rebin-time inner histogram, safety-margined
+            # for drift until the next rebin, never above the outer one
+            cum_in = [min(int(math.ceil(ci * self.inner_safety)), co)
+                      for ci, co in zip(cum_inner, cum)]
+            tiers_inner = tier_plan(cum_in, self.pair_bucket, M,
+                                    SLOT_QUANTUM, K)
+        # what the old single-rectangle schedule (one global k_exec)
+        # would have evaluated — the PR's per-pair-bound gain baseline
+        global_kexec = bucket(cum[0], self.pair_bucket, M) * \
+            bucket(occ, SLOT_QUANTUM, K) ** 2 if cum[0] else 0
         self._pair_stats = self.pair_schedule.slot_pair_stats(
-            n_exec=n_exec, k_exec=k_exec, n_keep=n_keep, max_occupancy=occ)
-        self._pair_stats["force_backend"] = self.force_backend
-        self._sched_exec = (sel, n_exec, k_exec)
+            tiers=tiers, tiers_inner=tiers_inner, n_keep=cum[0],
+            n_inner=cum_inner[0], max_occupancy=occ,
+            global_kexec_slot_pairs=global_kexec)
+        self._pair_stats.update({
+            "force_backend": self.force_backend,
+            "nstprune": self.nstprune,
+            "inner_radius": self.r_inner,
+            "inner_overflow_blocks": self._inner_overflows,
+            "inner_disabled": bool(self.nstprune and disable_inner),
+        })
+        self.sched_history.append(
+            (tier_rows(tiers),
+             tier_rows(tiers_inner) if tiers_inner else tier_rows(tiers)))
+        self._sched_exec = (sel, tiers, tiers_inner)
         return self._sched_exec
+
+    def _note_overflow(self, ovf) -> bool:
+        """Record a block's rolling-prune overflow scalar; True if the
+        next block must fall back to the outer ladder."""
+        if not self.nstprune or int(jax.device_get(ovf)) == 0:
+            return False
+        self._inner_overflows += 1
+        if self._inner_overflows == 1:
+            warnings.warn(
+                "rolling inner prune overflowed its tier ladder (more "
+                "survivors than the rebin-time sizing allowed); falling "
+                "back to the outer pair list for the next block — raise "
+                "inner_safety to avoid this", RuntimeWarning,
+                stacklevel=3)
+        return True
 
     def simulate(self, n_steps: int, state=None, collect=True):
         """Run n_steps in nstlist-sized TPU-resident blocks.
@@ -523,7 +683,8 @@ class MDEngine:
         one fused dispatch (steps + rebin/migration + prune); the final
         block — after which the host path would not rebin either — runs
         the plain block program.  Both paths visit bitwise-identical
-        states and the host still reads only the two prune scalars per
+        states and the host still reads only the prune histograms (two
+        small per-level vectors + occupancy + overflow scalars) per
         block boundary.
         """
         nst = self.system.params.nstlist
@@ -543,18 +704,25 @@ class MDEngine:
                 cell_f, cell_i, force, m, diag = self.block_rebin_fn(
                     cell_f, cell_i, force, take)
             elif fuse:
-                sel, n_exec, k_exec = sched
-                (cell_f, cell_i, force, m, diag, sel2, n_keep, occ) = \
+                sel, tiers, tiers_inner = sched
+                (cell_f, cell_i, force, m, diag, sel2, cum, cum_inner,
+                 occ, ovf) = \
                     self.block_sched_rebin_fn(cell_f, cell_i, force, sel,
-                                              take, n_exec, k_exec)
-                sched = self._bucket_exec(sel2, n_keep, occ)
+                                              take, tiers, tiers_inner)
+                sched = self._bucket_exec(
+                    sel2, cum, cum_inner, occ,
+                    disable_inner=self._note_overflow(ovf))
             elif sched is None:
                 cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
                                                          force, take)
             else:
-                sel, n_exec, k_exec = sched
-                cell_f, cell_i, force, m = self.block_sched_fn(
-                    cell_f, cell_i, force, sel, take, n_exec, k_exec)
+                sel, tiers, tiers_inner = sched
+                cell_f, cell_i, force, m, ovf = self.block_sched_fn(
+                    cell_f, cell_i, force, sel, take, tiers, tiers_inner)
+                # read the block's overflow scalar NOW (not at the next
+                # boundary) so a final block's overflow is still counted
+                # and warned — the monitor contract has no blind spot
+                disable = self._note_overflow(ovf)
             if collect:
                 all_metrics.append(jax.device_get(m))
             done += take
@@ -562,7 +730,9 @@ class MDEngine:
                 diags.append(jax.device_get(diag))
             elif done < n_steps:
                 cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
-                sched = self._refresh_schedule(cell_f, cell_i)
+                sched = self._refresh_schedule(
+                    cell_f, cell_i,
+                    disable_inner=sched is not None and disable)
                 diags.append(jax.device_get(diag))
         metrics = {}
         if collect and all_metrics:

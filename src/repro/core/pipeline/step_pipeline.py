@@ -74,10 +74,12 @@ class StepFns:
     ``ctx`` is the *block-constant* context: it is passed through every
     callback unchanged for the whole multi-step program, so anything in
     it (pre-exchanged index arrays, the MD engine's pruned pair schedule
-    — ``pair_sel`` / ``k_exec`` from
+    — the ``pair_sel`` packed prefix and static ``tiers`` ladder from
     :mod:`repro.core.md.pair_schedule`) is hoisted out of the scan and
     shared by BOTH pipeline modes; per-mode drift in block-level inputs
-    would break the bitwise off/double_buffer equivalence.
+    would break the bitwise off/double_buffer equivalence.  (The MD
+    engine's rolling inner prune swaps the schedule *between* pipeline
+    invocations — each ``run_local`` call still sees one constant ctx.)
     """
 
     begin: Callable[[Any, jnp.ndarray, Any], Tuple[Any, Any, jnp.ndarray]]

@@ -27,9 +27,13 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.md.system import ForceField
 
 
-def _pair_kernel(a_ref, b_ref, ta_ref, tb_ref, same_ref, eps_ref,
-                 sig_ref, fa_ref, fb_ref, pe_ref,
-                 *, r_cut2, k_rf, c_rf, kk: int):
+def _pair_kernel(a_ref, b_ref, ta_ref, tb_ref, same_ref, *rest,
+                 r_cut2, k_rf, c_rf, kk: int, use_counts: bool):
+    if use_counts:
+        (cnta_ref, cntb_ref, eps_ref, sig_ref,
+         fa_ref, fb_ref, pe_ref) = rest
+    else:
+        eps_ref, sig_ref, fa_ref, fb_ref, pe_ref = rest
     a = a_ref[...]                                # (C, K, 4)
     b = b_ref[...]
     ta = ta_ref[...]                              # (C, K) int32
@@ -40,7 +44,14 @@ def _pair_kernel(a_ref, b_ref, ta_ref, tb_ref, same_ref, eps_ref,
 
     pos_a, q_a = a[..., :3], a[..., 3]
     pos_b, q_b = b[..., :3], b[..., 3]
-    valid_a, valid_b = ta >= 0, tb >= 0
+    if use_counts:
+        # per-pair slot bounds: binning packs each cell's atoms into a
+        # contiguous slot prefix, so slot < count IS slot validity
+        iota = jax.lax.broadcasted_iota(jnp.int32, ta.shape, 1)
+        valid_a = iota < cnta_ref[...][:, None]
+        valid_b = iota < cntb_ref[...][:, None]
+    else:
+        valid_a, valid_b = ta >= 0, tb >= 0
 
     dx = pos_a[:, :, None, :] - pos_b[:, None, :, :]
     r2 = jnp.sum(dx * dx, axis=-1)
@@ -79,38 +90,52 @@ def _pair_kernel(a_ref, b_ref, ta_ref, tb_ref, same_ref, eps_ref,
 
 
 def pair_forces(a, b, ta, tb, same, ff: ForceField, block: int = 8,
-                interpret: bool = True):
+                interpret: bool = True, cnt_a=None, cnt_b=None):
     """Forces + energies for N cell pairs.
 
     a, b: (N, K, 4) packed [x, y, z, q]; ta, tb: (N, K) atom types with
     -1 padding; same: (N,) nonzero when a pair is a cell with itself
-    (triangle masking).  Returns (fa (N,K,3), fb (N,K,3), pe (N,)).
+    (triangle masking).  ``cnt_a`` / ``cnt_b`` (N,) int32, when given,
+    supply per-pair slot bounds: slot validity becomes ``slot < count``
+    (the packed-prefix invariant of ``cells.bin_to_cells``) instead of
+    the per-slot type test — the form the tiered pair schedule feeds,
+    where the batch K is already the pair's bucketed bound.  Returns
+    (fa (N,K,3), fb (N,K,3), pe (N,)).
     """
     N, K, _ = a.shape
     block = min(block, N)
     while N % block:
         block -= 1
     grid = (N // block,)
+    use_counts = cnt_a is not None
     kern = functools.partial(
         _pair_kernel,
-        r_cut2=ff.r_cut ** 2, k_rf=ff.k_rf, c_rf=ff.c_rf, kk=K)
+        r_cut2=ff.r_cut ** 2, k_rf=ff.k_rf, c_rf=ff.c_rf, kk=K,
+        use_counts=use_counts)
     bs = lambda *shape: pl.BlockSpec(shape, lambda i: (i,) + (0,) *
                                      (len(shape) - 1))
     eps_t = jnp.asarray(ff.eps, a.dtype)
     sig_t = jnp.asarray(ff.sigma, a.dtype)
     T = eps_t.shape[0]
     tbl = pl.BlockSpec((T, T), lambda i: (0, 0))
+    in_specs = [bs(block, K, 4), bs(block, K, 4),
+                bs(block, K), bs(block, K), bs(block)]
+    args = [a, b, ta, tb, same]
+    if use_counts:
+        in_specs += [bs(block), bs(block)]
+        args += [cnt_a.astype(jnp.int32), cnt_b.astype(jnp.int32)]
+    in_specs += [tbl, tbl]
+    args += [eps_t, sig_t]
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[bs(block, K, 4), bs(block, K, 4),
-                  bs(block, K), bs(block, K), bs(block), tbl, tbl],
+        in_specs=in_specs,
         out_specs=[bs(block, K, 3), bs(block, K, 3), bs(block)],
         out_shape=[jax.ShapeDtypeStruct((N, K, 3), a.dtype),
                    jax.ShapeDtypeStruct((N, K, 3), a.dtype),
                    jax.ShapeDtypeStruct((N,), a.dtype)],
         interpret=interpret,
-    )(a, b, ta, tb, same, eps_t, sig_t)
+    )(*args)
 
 
 # --------------------------------------------------------------------------
@@ -169,19 +194,22 @@ def scatter_accum(cell_a, cell_b, fa, fb, n_cells: int, chunk: int = 8,
 
 def pair_forces_accum(a, b, ta, tb, same, cell_a, cell_b, ff: ForceField,
                       n_cells: int, block: int = 8, interpret: bool = True,
-                      epilogue: str = "xla"):
+                      epilogue: str = "xla", cnt_a=None, cnt_b=None):
     """``pair_forces`` extended with the scatter-accumulate epilogue.
 
     Computes one batch of cell-pair forces and accumulates both sides
     into a fresh ``(n_cells, K, 3)`` extended force array (plus the
-    per-pair energies).  ``epilogue="pallas"`` drives the sequential
+    per-pair energies).  ``cnt_a`` / ``cnt_b`` thread the per-pair slot
+    bounds through to the kernel's validity masks (the tiered pair
+    schedule's batches are sized per tier, not to one rectangular
+    ``K_exec``).  ``epilogue="pallas"`` drives the sequential
     :func:`scatter_accum` kernel — the TPU-native shape of the fused
     NB-force + reduction stage; ``"xla"`` lowers the same accumulation
     as an XLA scatter-add (duplicate-safe, and the faster choice under
     interpret mode on CPU).  Both orders are fixed per compilation.
     """
     fa, fb, pe = pair_forces(a, b, ta, tb, same, ff, block=block,
-                             interpret=interpret)
+                             interpret=interpret, cnt_a=cnt_a, cnt_b=cnt_b)
     if epilogue == "pallas":
         F = scatter_accum(cell_a, cell_b, fa, fb, n_cells,
                           interpret=interpret)

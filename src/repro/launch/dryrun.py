@@ -305,11 +305,13 @@ def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
 def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
                 n_atoms: int = 800, steps: int = 6, dd=(2, 2, 2),
                 pipeline: str = "off", depth: int = 2,
-                overlap_rebin: bool = False, verbose: bool = True):
+                overlap_rebin: bool = False, nstprune: int = 0,
+                verbose: bool = True):
     """Run a short DD simulation and record the chosen force backend, its
-    prune ratio / evaluated-work accounting, the occupancy-adjusted halo
-    byte accounting (``bytes_index`` / ``useful_bytes``), and the
-    overlap model at the engine's pipeline depth."""
+    prune ratio / evaluated-work accounting (tier ladders, rolling-prune
+    columns), the occupancy-adjusted halo byte accounting
+    (``bytes_index`` / ``useful_bytes``), and the overlap model at the
+    engine's pipeline depth."""
     from repro.core.halo_plan import HaloSpec
     from repro.core.md import MDEngine, make_grappa_like
     from repro.launch.mesh import make_mesh
@@ -319,7 +321,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
     record = {"kind": "mdforce", "dd": dd_name, "backend": halo_backend,
               "force_backend": force_backend, "pipeline": pipeline,
               "pipeline_depth": depth, "overlap_rebin": overlap_rebin,
-              "n_atoms": n_atoms, "ok": False}
+              "nstprune": nstprune, "n_atoms": n_atoms, "ok": False}
     try:
         mesh = make_mesh(dd, ("z", "y", "x"))
         system = make_grappa_like(n_atoms, seed=1)
@@ -327,7 +329,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
                         backend=halo_backend)
         eng = MDEngine(system, mesh, spec, pipeline=pipeline,
                        pipeline_depth=depth, overlap_rebin=overlap_rebin,
-                       force_backend=force_backend)
+                       force_backend=force_backend, nstprune=nstprune)
         _, metrics, diags = eng.simulate(steps)
         record.update({
             "ok": True,
@@ -360,7 +362,8 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
 
 def run_md_cells(force_backend: str, force: bool = False,
                  halo_backend: str = "fused", pipeline: str = "off",
-                 depth: int = 2, overlap_rebin: bool = False):
+                 depth: int = 2, overlap_rebin: bool = False,
+                 nstprune: int = 0):
     RESULTS.mkdir(parents=True, exist_ok=True)
     name = f"mdforce__3d__{halo_backend}__{force_backend}"
     if pipeline != "off":
@@ -369,16 +372,19 @@ def run_md_cells(force_backend: str, force: bool = False,
             name += f"__d{depth}"
     if overlap_rebin:
         name += "__or"
+    if nstprune:
+        name += f"__np{nstprune}"
     path = RESULTS / f"{name}.json"
     if path.exists() and not force:
         print(f"[skip] {path.name} exists")
         return
     print(f"[mdforce] 3d x {halo_backend} x force={force_backend} "
           f"pipeline={pipeline} depth={depth} "
-          f"overlap_rebin={overlap_rebin}", flush=True)
+          f"overlap_rebin={overlap_rebin} nstprune={nstprune}", flush=True)
     rec = run_md_cell(force_backend=force_backend,
                       halo_backend=halo_backend, pipeline=pipeline,
-                      depth=depth, overlap_rebin=overlap_rebin)
+                      depth=depth, overlap_rebin=overlap_rebin,
+                      nstprune=nstprune)
     path.write_text(json.dumps(rec, indent=1))
     print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
           f"({rec['wall_s']}s)", flush=True)
@@ -416,6 +422,9 @@ def main():
     ap.add_argument("--overlap-rebin", action="store_true",
                     help="fuse rebin/migration + prune into the --md "
                          "block program (GROMACS DLB analogue)")
+    ap.add_argument("--nstprune", type=int, default=0,
+                    help="rolling inner-prune cadence for --md cells "
+                         "(dual pair list; 0 = outer list only)")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--pod-compress", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
@@ -435,7 +444,8 @@ def main():
     if args.md:
         run_md_cells(force_backend=args.force_backend, force=args.force,
                      pipeline=args.pipeline, depth=args.pipeline_depth,
-                     overlap_rebin=args.overlap_rebin)
+                     overlap_rebin=args.overlap_rebin,
+                     nstprune=args.nstprune)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -23,12 +23,12 @@ AXES = ("z", "y", "x")
 
 
 def run(system, mesh, backend, pipeline, n_steps, pulses=None, widths=None,
-        force_backend="dense", depth=2, overlap_rebin=False):
+        force_backend="dense", depth=2, overlap_rebin=False, nstprune=0):
     spec = HaloSpec(axis_names=AXES, widths=widths or (1, 1, 1),
                     backend=backend, pulses=pulses)
     eng = MDEngine(system, mesh, spec, pipeline=pipeline,
                    pipeline_depth=depth, overlap_rebin=overlap_rebin,
-                   force_backend=force_backend)
+                   force_backend=force_backend, nstprune=nstprune)
     (cf, ci), metrics, diags = eng.simulate(n_steps)
     return (np.asarray(jax.device_get(cf)), np.asarray(jax.device_get(ci)),
             {k: np.asarray(v) for k, v in metrics.items()}, diags, eng)
@@ -128,29 +128,40 @@ def main():
     # sparse/off, sparse/double_buffer (any depth), and the fused
     # overlap_rebin path must stay bitwise-identical to EACH OTHER (the
     # block-constant schedule rides the StepFns ctx, and the fused
-    # rebin+prune program computes the exact host-dispatched schedule)
-    cf_a, ci_a, m_a, d_a, eng_a = run(system, mesh, "signal", "off",
-                                      n_steps, force_backend="sparse")
-    variants = [("double_buffer", 3, False), ("double_buffer", 2, True),
-                ("off", 2, True)]
-    for pipeline, depth, ovr in variants:
-        cf_b, ci_b, m_b, d_b, eng_b = run(
-            system, mesh, "signal", pipeline, n_steps,
-            force_backend="sparse", depth=depth, overlap_rebin=ovr)
-        tag = f"sparse/{pipeline}/d{depth}" + ("/ovr" if ovr else "")
-        assert np.array_equal(cf_a, cf_b) and np.array_equal(ci_a, ci_b), \
-            f"{tag} trajectory differs from sparse/off"
-        for k in m_a:
-            assert np.array_equal(m_a[k], m_b[k]), (tag, k)
-        # the fused prune must hand the NEXT block the same exec schedule
-        # (prune conservativeness across the block boundary: identical
-        # surviving-pair sets, identical bucketed shapes)
-        sel_a, n_a, k_a = eng_a._sched_exec
-        sel_b, n_b, k_b = eng_b._sched_exec
-        assert (n_a, k_a) == (n_b, k_b), tag
-        assert np.array_equal(np.asarray(jax.device_get(sel_a)),
-                              np.asarray(jax.device_get(sel_b))), tag
-        print(f"{tag} == sparse/off bitwise, same post-boundary schedule")
+    # rebin+prune program computes the exact host-dispatched schedule),
+    # for the static schedule (nstprune=0) AND the rolling dual pair
+    # list (nstprune>0: in-block refreshes, host-read overflow scalar)
+    for nstprune in (0, 4):
+        cf_a, ci_a, m_a, d_a, eng_a = run(system, mesh, "signal", "off",
+                                          n_steps, force_backend="sparse",
+                                          nstprune=nstprune)
+        variants = [("double_buffer", 3, False),
+                    ("double_buffer", 2, True), ("off", 2, True)]
+        for pipeline, depth, ovr in variants:
+            cf_b, ci_b, m_b, d_b, eng_b = run(
+                system, mesh, "signal", pipeline, n_steps,
+                force_backend="sparse", depth=depth, overlap_rebin=ovr,
+                nstprune=nstprune)
+            tag = f"sparse/np{nstprune}/{pipeline}/d{depth}" + \
+                ("/ovr" if ovr else "")
+            assert np.array_equal(cf_a, cf_b) and \
+                np.array_equal(ci_a, ci_b), \
+                f"{tag} trajectory differs from sparse/off"
+            for k in m_a:
+                assert np.array_equal(m_a[k], m_b[k]), (tag, k)
+            # the fused prune must hand the NEXT block the same exec
+            # schedule (prune conservativeness across the block
+            # boundary: identical surviving-pair sets, identical
+            # bucketed tier ladders)
+            sel_a, t_a, ti_a = eng_a._sched_exec
+            sel_b, t_b, ti_b = eng_b._sched_exec
+            assert (t_a, ti_a) == (t_b, ti_b), tag
+            assert np.array_equal(np.asarray(jax.device_get(sel_a)),
+                                  np.asarray(jax.device_get(sel_b))), tag
+            assert eng_b.pair_stats()["nstprune"] == nstprune
+            assert eng_b.pair_stats()["inner_overflow_blocks"] == 0, tag
+            print(f"{tag} == sparse/off bitwise, same post-boundary "
+                  "schedule")
 
     print("check_md OK")
 

@@ -436,6 +436,72 @@ def test_md_engine_overlap_stats_and_validation():
         ov["exposed_phases_per_step"]
 
 
+# --------------------------------------------------------------------------
+# prune axis: the conformance matrix extended over the dual pair list.
+# For a FIXED prune schedule (nstprune setting), every pipeline mode /
+# depth / rebin-fusion cell must be bitwise-identical — the rolling
+# prune's sub-block refreshes ride the same block-constant ctx contract
+# as the static schedule, so software pipelining cannot perturb them.
+# --------------------------------------------------------------------------
+
+PRUNE_MATRIX = [(nstprune, mode, depth, ovr)
+                for nstprune in (0, 4)
+                for (mode, depth, ovr) in (
+                    ("off", 2, False),          # the reference cell
+                    ("double_buffer", 2, False),
+                    ("double_buffer", 3, False),
+                    ("off", 2, True),           # overlap_rebin fused
+                    ("double_buffer", 3, True),
+                )]
+
+
+@functools.lru_cache(maxsize=None)
+def _run_md_prune_cell(nstprune, mode, depth, ovr, n_steps=24):
+    from repro.core.md import MDEngine, make_grappa_like
+
+    sys_ = make_grappa_like(200, seed=5)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    eng = MDEngine(sys_, mesh,
+                   HaloSpec(("z", "y", "x"), (1, 1, 1), backend="signal"),
+                   pipeline=mode, pipeline_depth=depth, overlap_rebin=ovr,
+                   force_backend="sparse", nstprune=nstprune)
+    (cf, ci), m, diags = eng.simulate(n_steps)
+    sel, tiers, tiers_inner = eng._sched_exec
+    return (np.asarray(jax.device_get(cf)), np.asarray(jax.device_get(ci)),
+            {k: np.asarray(v) for k, v in m.items()},
+            [{k: np.asarray(v) for k, v in d.items()} for d in diags],
+            (np.asarray(jax.device_get(sel)), tiers, tiers_inner),
+            eng.pair_stats())
+
+
+@pytest.mark.parametrize(
+    "nstprune,mode,depth,ovr", PRUNE_MATRIX,
+    ids=[f"np{p}-{m}-d{d}" + ("-ovr" if o else "")
+         for p, m, d, o in PRUNE_MATRIX])
+def test_prune_conformance_matrix(nstprune, mode, depth, ovr):
+    """Sparse trajectories are bitwise-identical across pipeline modes
+    and the fused/host-dispatched rebin paths for a fixed nstprune, and
+    every cell hands the next block the identical post-prune exec
+    schedule (same packed sel, same tier ladders)."""
+    ref = _run_md_prune_cell(nstprune, "off", 2, False)
+    got = _run_md_prune_cell(nstprune, mode, depth, ovr)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    for k in ref[2]:
+        np.testing.assert_array_equal(got[2][k], ref[2][k])
+    assert len(got[3]) == len(ref[3])            # same rebin cadence
+    for gd, rd in zip(got[3], ref[3]):
+        for k in rd:
+            np.testing.assert_array_equal(gd[k], rd[k])
+    sel_g, tiers_g, inner_g = got[4]
+    sel_r, tiers_r, inner_r = ref[4]
+    assert (tiers_g, inner_g) == (tiers_r, inner_r)
+    np.testing.assert_array_equal(sel_g, sel_r)
+    ps = got[5]
+    assert ps["nstprune"] == nstprune
+    assert ps["inner_overflow_blocks"] == 0
+
+
 def test_md_engine_deep_window_and_overlap_rebin_bitwise():
     """24 steps (one rebin/migration boundary at nstlist=20): deep
     windows and the fused rebin path must all reproduce the
