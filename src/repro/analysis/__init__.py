@@ -1,0 +1,51 @@
+"""repro.analysis: static comm-schedule verifier + JAX/Pallas hazard linter.
+
+Two layers, both promoted to build-time/CI gates:
+
+* :mod:`repro.analysis.schedule_verifier` — symbolically replays the
+  put-with-signal protocol any ``(backend, pipeline mode, depth, width,
+  pulses, nstprune, overlap_rebin)`` configuration would emit, without
+  tracing or running the program, and decides window-safety /
+  acquire-before-release / slot-clobber / drain-leaves-zero-in-flight by
+  exhaustive slot-state enumeration.  ``StepPipeline.build`` and
+  ``MDEngine.__init__`` reject unsafe configs with the counterexample
+  event trace in the error (escape hatch: ``verify="warn"``).
+
+* :mod:`repro.analysis.lint` — AST rules (``RA001``..) for the JAX/Pallas
+  pitfalls this codebase has repeatedly hand-fixed; run via
+  ``python -m repro.analysis`` (nonzero exit on findings).
+"""
+from repro.analysis.lint import (
+    RULES,
+    Diagnostic,
+    Rule,
+    lint_file,
+    lint_paths,
+)
+from repro.analysis.schedule_verifier import (
+    CommEvent,
+    ConfigError,
+    EventSegment,
+    ScheduleConfig,
+    ScheduleReport,
+    ScheduleVerificationError,
+    Violation,
+    check_halo_config,
+    check_md_config,
+    extract_events,
+    gate_md_build,
+    gate_pipeline_build,
+    gate_schedule,
+    probe_steps,
+    verify_build,
+    verify_schedule,
+)
+
+__all__ = [
+    "RULES", "Rule", "Diagnostic", "lint_file", "lint_paths",
+    "CommEvent", "EventSegment", "Violation", "ScheduleConfig",
+    "ScheduleReport", "ConfigError", "ScheduleVerificationError",
+    "check_halo_config", "check_md_config", "extract_events",
+    "gate_md_build", "gate_pipeline_build", "gate_schedule",
+    "probe_steps", "verify_build", "verify_schedule",
+]

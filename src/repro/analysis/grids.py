@@ -1,0 +1,64 @@
+"""The PR4/PR5 conformance-matrix config grids, as verifier inputs.
+
+One definition shared by the CLI (``python -m repro.analysis``), CI's
+``static-analysis`` job and the test suite, mirroring the runtime grids
+in ``tests/test_pipeline.py``:
+
+* :func:`pr4_grid` — backend x pipeline mode x halo width x window depth
+  (the 48-cell cross-backend conformance matrix, 8-step blocks);
+* :func:`pr5_prune_grid` — the dual-pair-list axis: nstprune x
+  (mode, depth, overlap_rebin) over 20-step (nstlist) blocks on the
+  3-D signal backend with the sparse force engine.
+
+Every cell must verify as statically safe; the CLI fails otherwise.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.analysis.schedule_verifier import ScheduleConfig
+
+PR4_BACKENDS = ("serialized", "fused", "pallas", "signal")
+PR4_MODES = ("off", "double_buffer")
+PR4_WIDTHS = (1, 2)
+PR4_DEPTHS = (2, 3, 4)
+PR4_STEPS = 8
+
+PR5_NSTPRUNE = (0, 4)
+PR5_CELLS = (
+    ("off", 2, False),
+    ("double_buffer", 2, False),
+    ("double_buffer", 3, False),
+    ("off", 2, True),
+    ("double_buffer", 3, True),
+)
+PR5_STEPS = 20          # the engine's nstlist block length
+
+
+def pr4_grid() -> Tuple[ScheduleConfig, ...]:
+    """The 48-cell PR4 conformance matrix as schedule configs."""
+    cells = []
+    for backend in PR4_BACKENDS:
+        for mode in PR4_MODES:
+            for width in PR4_WIDTHS:
+                for depth in PR4_DEPTHS:
+                    cells.append(ScheduleConfig.from_spec(
+                        ("z",), (width,), backend=backend, mode=mode,
+                        depth=depth, n_steps=PR4_STEPS))
+    return tuple(cells)
+
+
+def pr5_prune_grid() -> Tuple[ScheduleConfig, ...]:
+    """The PR5 dual-pair-list prune axis as schedule configs."""
+    cells = []
+    for nstprune in PR5_NSTPRUNE:
+        for mode, depth, ovr in PR5_CELLS:
+            cells.append(ScheduleConfig.from_spec(
+                ("z", "y", "x"), (1, 1, 1), backend="signal", mode=mode,
+                depth=depth, n_steps=PR5_STEPS, nstprune=nstprune,
+                overlap_rebin=ovr, force_backend="sparse"))
+    return tuple(cells)
+
+
+def full_grid() -> Tuple[ScheduleConfig, ...]:
+    return pr4_grid() + pr5_prune_grid()

@@ -1,0 +1,613 @@
+"""AST hazard linter for the JAX/Pallas pitfalls this repo hand-fixes.
+
+Every rule encodes a failure mode the codebase has already hit (or
+guards against by idiom) while rebuilding the paper's GPU-initiated
+halo exchange on TPU:
+
+====== ==========================  =============================================
+code   name                        catches
+====== ==========================  =============================================
+RA001  host-sync-in-traced         ``.item()`` / ``.tolist()`` /
+                                   ``jax.device_get`` / ``int()``/``float()``/
+                                   ``bool()`` over jnp/lax results /
+                                   ``np.asarray`` inside a traced function —
+                                   a host round-trip inside the block program
+RA002  python-branch-on-traced     ``if``/``while``/``assert`` whose test calls
+                                   jnp/lax inside a traced function — trace-time
+                                   ConcretizationError (use ``lax.cond``/``where``)
+RA003  side-effect-in-traced       ``print`` / ``warnings.warn`` inside a traced
+                                   function — silently runs once at trace time
+                                   (use ``jax.debug.print``)
+RA004  kernel-dtype                jnp array constructors without an explicit
+                                   dtype in kernel code — weak-type promotion
+                                   drifts across backends/precisions
+RA005  unpinned-pair-reduction     axis-reductions downstream of ``pair_terms``
+                                   not wrapped in ``lax.optimization_barrier`` —
+                                   partial-sum order then depends on how the
+                                   surrounding schedule fuses, breaking the
+                                   cross-backend bitwise conformance bar (PR2)
+RA006  collective-axis-name        literal mesh-axis names in ``lax.psum``/
+                                   ``ppermute``/... that no mesh/constant in the
+                                   project declares — shard_map binding error
+                                   (or worse: a silently wrong reduction)
+RA007  scatter-mode                dynamic ``.at[idx].add/max/min`` without an
+                                   explicit ``mode=`` — sentinel-row scatters
+                                   rely on JAX's implicit out-of-bounds drop;
+                                   state ``mode="drop"`` (the masked-add idiom)
+====== ==========================  =============================================
+
+Suppression: append ``# noqa`` (all rules) or ``# noqa: RA005, RA007``
+to the flagged line.  Traced-context detection is a deliberate
+under-approximation: a function counts as traced when it is passed to a
+jax transform (``lax.scan``/``cond``/..., ``jax.jit``/``vmap``/...,
+``shard_map``(_norep), ``pl.pallas_call``, ``StepFns``, ``defvjp``),
+named with a ``_kernel`` suffix taking ``*_ref`` args, or decorated with
+a transform — helpers only ever called *from* traced code are not
+chased, so the linter never false-positives on host-side code.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["RULES", "Rule", "Diagnostic", "lint_paths", "lint_file",
+           "iter_source_files"]
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+RULES: Dict[str, Rule] = {r.code: r for r in (
+    Rule("RA001", "host-sync-in-traced",
+         "host synchronization inside a traced function"),
+    Rule("RA002", "python-branch-on-traced",
+         "Python control flow branching on a traced value"),
+    Rule("RA003", "side-effect-in-traced",
+         "host side effect inside a traced function"),
+    Rule("RA004", "kernel-dtype",
+         "array constructor without explicit dtype in kernel code"),
+    Rule("RA005", "unpinned-pair-reduction",
+         "pair reduction not pinned by lax.optimization_barrier"),
+    Rule("RA006", "collective-axis-name",
+         "collective over an undeclared mesh axis name"),
+    Rule("RA007", "scatter-mode",
+         "dynamic scatter-accumulate without explicit mode="),
+)}
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"[{RULES[self.code].name}] {self.message}")
+
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9,\s]+))?",
+                      re.IGNORECASE)
+
+_TRACE_TRANSFORMS = {"scan", "cond", "while_loop", "fori_loop", "switch",
+                     "associative_scan", "map", "jit", "vmap", "pmap",
+                     "grad", "value_and_grad", "checkpoint", "remat",
+                     "custom_vjp", "custom_jvp", "shard_map",
+                     "shard_map_norep", "pallas_call", "defvjp", "defjvp",
+                     "when"}
+_COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "ppermute", "pshuffle",
+                "all_gather", "all_to_all", "psum_scatter", "axis_index"}
+_CTORS = {"zeros": 2, "ones": 2, "empty": 2, "full": 3}
+
+
+def _qual(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain ('lax.psum'), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _parents(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    par: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            par[child] = node
+    return par
+
+
+def _const_str_set(node: ast.AST) -> Optional[Set[str]]:
+    """{'z','y','x'} for a str constant or tuple/list of them, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[str] = set()
+        for el in node.elts:
+            sub = _const_str_set(el)
+            if sub is None:
+                return None
+            out |= sub
+        return out
+    return None
+
+
+# --------------------------------------------------------------------------
+# per-file model
+# --------------------------------------------------------------------------
+
+class _FileModel:
+    """Aliases, traced functions and constants of one parsed module."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source_lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents = _parents(self.tree)
+        self.jnp: Set[str] = set()
+        self.np: Set[str] = set()
+        self.lax: Set[str] = set()
+        self.jax: Set[str] = set()
+        self.str_consts: Dict[str, Set[str]] = {}
+        self.axis_literals: Set[str] = set()
+        self._collect_imports_and_consts()
+        self.funcs = self._collect_funcs()
+        self.partial_alias = self._collect_partial_aliases()
+        self.traced, self.kernels = self._collect_traced()
+
+    # -- imports / module constants ---------------------------------------
+    def _collect_imports_and_consts(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    if a.name == "numpy":
+                        self.np.add(name)
+                    elif a.name in ("jax.numpy",):
+                        self.jnp.add(a.asname or "jax.numpy")
+                    elif a.name == "jax.lax":
+                        self.lax.add(a.asname or "lax")
+                    elif a.name == "jax":
+                        self.jax.add(name)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                for a in node.names:
+                    name = a.asname or a.name
+                    if mod == "jax" and a.name == "numpy":
+                        self.jnp.add(name)
+                    elif mod == "jax" and a.name == "lax":
+                        self.lax.add(name)
+        for node in self.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                vals = _const_str_set(node.value)
+                if vals:
+                    self.str_consts[node.targets[0].id] = vals
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                fq = _qual(node.func) or ""
+                last = fq.split(".")[-1]
+                if last in ("make_mesh", "Mesh", "HaloSpec"):
+                    for sub in ast.walk(node):
+                        vals = _const_str_set(sub) if isinstance(
+                            sub, (ast.Tuple, ast.List)) else None
+                        if vals:
+                            self.axis_literals |= vals
+                if last == "AbstractMesh":
+                    pass
+        for kw_name in ("axis_names", "axis_name"):
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.keyword) and node.arg == kw_name:
+                    vals = _const_str_set(node.value)
+                    if vals:
+                        self.axis_literals |= vals
+
+    def _root(self, fq: Optional[str]) -> str:
+        return fq.split(".")[0] if fq else ""
+
+    def is_jnp(self, fq: Optional[str]) -> bool:
+        return bool(fq) and (self._root(fq) in self.jnp
+                             or fq.startswith("jax.numpy."))
+
+    def is_laxish(self, fq: Optional[str]) -> bool:
+        if not fq:
+            return False
+        root = self._root(fq)
+        return (root in self.lax or fq.startswith("jax.lax.")
+                or (root in self.jax and ".lax." in fq))
+
+    def is_jaxish(self, fq: Optional[str]) -> bool:
+        return bool(fq) and (self.is_jnp(fq) or self.is_laxish(fq)
+                             or self._root(fq) in self.jax)
+
+    # -- function discovery ------------------------------------------------
+    def _collect_funcs(self) -> Dict[str, List[ast.AST]]:
+        funcs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                funcs.setdefault(node.name, []).append(node)
+        return funcs
+
+    def _collect_partial_aliases(self) -> Dict[str, str]:
+        alias: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call):
+                fq = _qual(node.value.func) or ""
+                if fq.split(".")[-1] == "partial" and node.value.args \
+                        and isinstance(node.value.args[0], ast.Name):
+                    alias[node.targets[0].id] = node.value.args[0].id
+        return alias
+
+    def _fn_names_of_arg(self, arg: ast.AST) -> List[str]:
+        if isinstance(arg, ast.Name):
+            name = self.partial_alias.get(arg.id, arg.id)
+            return [name]
+        if isinstance(arg, ast.Call):
+            fq = _qual(arg.func) or ""
+            if fq.split(".")[-1] in ("partial", "shard_map",
+                                     "shard_map_norep"):
+                return [n for a in arg.args
+                        for n in self._fn_names_of_arg(a)]
+        return []
+
+    def _collect_traced(self) -> Tuple[Set[str], Set[str]]:
+        traced: Set[str] = set()
+        kernels: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                fq = _qual(node.func) or ""
+                last = fq.split(".")[-1]
+                if last in _TRACE_TRANSFORMS and "tree" not in fq:
+                    # jax.tree.map walks pytrees at trace time, it does
+                    # not enter a traced context — never treat it as one
+                    names = [n for a in node.args
+                             for n in self._fn_names_of_arg(a)]
+                    traced.update(names)
+                    if last == "pallas_call":
+                        kernels.update(names)
+                if last == "StepFns":
+                    for kw in node.keywords:
+                        traced.update(self._fn_names_of_arg(kw.value))
+        for name, defs in self.funcs.items():
+            for fn in defs:
+                for dec in getattr(fn, "decorator_list", []):
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    fq = _qual(target) or ""
+                    if fq.split(".")[-1] in _TRACE_TRANSFORMS:
+                        traced.add(name)
+                if name.endswith("_kernel") and any(
+                        a.arg.endswith("_ref")
+                        for a in fn.args.args + fn.args.kwonlyargs):
+                    kernels.add(name)
+        return traced | kernels, kernels
+
+    def traced_nodes(self) -> List[ast.AST]:
+        out = []
+        for name in sorted(self.traced):
+            out.extend(self.funcs.get(name, []))
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Lambda):
+                # lambdas passed to transforms: cheap over-approximation —
+                # a lambda body is one expression, every rule still applies
+                parent = self.parents.get(node)
+                if isinstance(parent, ast.Call):
+                    fq = _qual(parent.func) or ""
+                    if fq.split(".")[-1] in _TRACE_TRANSFORMS:
+                        out.append(node)
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule passes
+# --------------------------------------------------------------------------
+
+def _contains_jax_call(model: _FileModel, node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fq = _qual(sub.func)
+            if model.is_jnp(fq) or model.is_laxish(fq):
+                return True
+    return False
+
+
+def _check_traced_body(model: _FileModel, body: ast.AST,
+                       out: List[Diagnostic]) -> None:
+    path = model.path
+    for node in ast.walk(body):
+        if isinstance(node, ast.Call):
+            fq = _qual(node.func) or ""
+            last = fq.split(".")[-1]
+            if last in ("item", "tolist") and "." in fq:
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA001",
+                    f"`.{last}()` forces a host sync inside a traced "
+                    "function; keep the value on device (or move the "
+                    "read outside the block program)"))
+            elif last == "device_get" and model.is_jaxish(fq):
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA001",
+                    "`jax.device_get` inside a traced function is a "
+                    "host round-trip; hoist it out of the block program"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") \
+                    and node.args \
+                    and _contains_jax_call(model, node.args[0]):
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA001",
+                    f"`{node.func.id}()` over a jnp/lax result "
+                    "concretizes a tracer (host sync); use the array "
+                    "directly or `lax` arithmetic"))
+            elif last in ("asarray", "array") \
+                    and model._root(fq) in model.np:
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA001",
+                    "`np.asarray`/`np.array` on a traced value pulls it "
+                    "to host; use `jnp.asarray`"))
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA003",
+                    "`print` inside a traced function runs once at trace "
+                    "time; use `jax.debug.print`"))
+            elif fq == "warnings.warn":
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA003",
+                    "`warnings.warn` inside a traced function fires at "
+                    "trace time, not per step; warn from the host driver"))
+        elif isinstance(node, (ast.If, ast.While)):
+            if _contains_jax_call(model, node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA002",
+                    f"Python `{kind}` on a traced value raises at trace "
+                    "time; use `lax.cond`/`lax.while_loop`/`jnp.where`"))
+        elif isinstance(node, ast.Assert):
+            if _contains_jax_call(model, node.test):
+                out.append(Diagnostic(
+                    path, node.lineno, node.col_offset, "RA002",
+                    "`assert` on a traced value raises at trace time; "
+                    "use `checkify` or move the check to the host"))
+
+
+def _check_kernel_dtypes(model: _FileModel, scope: ast.AST,
+                         out: List[Diagnostic]) -> None:
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = _qual(node.func)
+        if not model.is_jnp(fq):
+            continue
+        last = fq.split(".")[-1]
+        kwargs = {kw.arg for kw in node.keywords}
+        if last in _CTORS:
+            if len(node.args) < _CTORS[last] and "dtype" not in kwargs:
+                out.append(Diagnostic(
+                    model.path, node.lineno, node.col_offset, "RA004",
+                    f"`jnp.{last}` without an explicit dtype in kernel "
+                    "code; weak-type promotion drifts across backends — "
+                    "pass dtype= (match the payload array)"))
+        elif last == "arange" and "dtype" not in kwargs and any(
+                isinstance(a, ast.Constant) and isinstance(a.value, float)
+                for a in node.args):
+            out.append(Diagnostic(
+                model.path, node.lineno, node.col_offset, "RA004",
+                "`jnp.arange` over float bounds without dtype in kernel "
+                "code; pass dtype= to pin the element type"))
+
+
+def _check_pair_reductions(model: _FileModel, out: List[Diagnostic]) -> None:
+    for defs in model.funcs.values():
+        for fn in defs:
+            pt_lines = [n.lineno for n in ast.walk(fn)
+                        if isinstance(n, ast.Call)
+                        and (_qual(n.func) or "").split(".")[-1]
+                        == "pair_terms"]
+            if not pt_lines:
+                continue
+            first_pt = min(pt_lines)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and model.is_jnp(_qual(node.func))
+                        and (_qual(node.func) or "").split(".")[-1]
+                        == "sum"):
+                    continue
+                has_axis = len(node.args) >= 2 or any(
+                    kw.arg == "axis" for kw in node.keywords)
+                if not has_axis or node.lineno < first_pt:
+                    continue
+                parent = model.parents.get(node)
+                while isinstance(parent, ast.UnaryOp):
+                    parent = model.parents.get(parent)
+                pinned = (isinstance(parent, ast.Call)
+                          and (_qual(parent.func) or "").split(".")[-1]
+                          == "optimization_barrier")
+                if not pinned:
+                    out.append(Diagnostic(
+                        model.path, node.lineno, node.col_offset, "RA005",
+                        "pair reduction downstream of `pair_terms` is not "
+                        "wrapped in `lax.optimization_barrier`; its "
+                        "partial-sum order then depends on how the "
+                        "surrounding schedule fuses, breaking bitwise "
+                        "cross-backend conformance (PR2)"))
+
+
+def _resolve_axis_names(model: _FileModel, node: ast.AST,
+                        project_consts: Dict[str, Set[str]]
+                        ) -> Optional[Set[str]]:
+    direct = _const_str_set(node)
+    if direct is not None:
+        return direct
+    if isinstance(node, ast.Name):
+        return model.str_consts.get(node.id, project_consts.get(node.id))
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        return model.str_consts.get(node.value.id,
+                                    project_consts.get(node.value.id))
+    return None
+
+
+def _check_collective_axes(model: _FileModel, declared: Set[str],
+                           project_consts: Dict[str, Set[str]],
+                           out: List[Diagnostic]) -> None:
+    for node in ast.walk(model.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = _qual(node.func) or ""
+        last = fq.split(".")[-1]
+        if last not in _COLLECTIVES or not model.is_laxish(fq):
+            continue
+        if last == "axis_index":
+            axis_arg = node.args[0] if node.args else None
+        else:
+            axis_arg = node.args[1] if len(node.args) > 1 else None
+        if axis_arg is None:
+            for kw in node.keywords:
+                if kw.arg in ("axis_name", "axis"):
+                    axis_arg = kw.value
+        if axis_arg is None:
+            continue
+        names = _resolve_axis_names(model, axis_arg, project_consts)
+        if names is None:
+            continue                      # runtime-parameterized: skip
+        unknown = sorted(names - declared)
+        if unknown:
+            out.append(Diagnostic(
+                model.path, node.lineno, node.col_offset, "RA006",
+                f"collective `{last}` over axis name(s) {unknown} that "
+                "no mesh/axis constant in the project declares; a "
+                "shard_map binding error (or a silently wrong "
+                "reduction) follows"))
+
+
+def _index_is_dynamic(idx: ast.AST) -> bool:
+    if isinstance(idx, ast.Constant):
+        return False
+    if isinstance(idx, ast.UnaryOp) and isinstance(idx.operand,
+                                                   ast.Constant):
+        return False
+    if isinstance(idx, ast.Slice):
+        return False                      # traced slice bounds error anyway
+    if isinstance(idx, ast.Tuple):
+        return any(_index_is_dynamic(el) for el in idx.elts)
+    return True
+
+
+def _check_scatter_modes(model: _FileModel, out: List[Diagnostic]) -> None:
+    for node in ast.walk(model.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("add", "max", "min")):
+            continue
+        sub = node.func.value
+        if not (isinstance(sub, ast.Subscript)
+                and isinstance(sub.value, ast.Attribute)
+                and sub.value.attr == "at"):
+            continue
+        if not _index_is_dynamic(sub.slice):
+            continue
+        if any(kw.arg == "mode" for kw in node.keywords):
+            continue
+        out.append(Diagnostic(
+            model.path, node.lineno, node.col_offset, "RA007",
+            f"dynamic `.at[...].{node.func.attr}` without explicit "
+            "mode=: sentinel/padding rows rely on JAX's implicit "
+            'out-of-bounds drop — state mode="drop" (the masked-add '
+            "idiom) to make the contract explicit"))
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+def _suppressed(model: _FileModel, diag: Diagnostic) -> bool:
+    if diag.line - 1 >= len(model.source_lines):
+        return False
+    m = _NOQA_RE.search(model.source_lines[diag.line - 1])
+    if not m:
+        return False
+    codes = m.group("codes")
+    if not codes:
+        return True
+    return diag.code in {c.strip().upper() for c in codes.split(",")}
+
+
+def iter_source_files(paths: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            files.append(path)
+    return files
+
+
+def _project_constants(models: Sequence[_FileModel]
+                       ) -> Tuple[Dict[str, Set[str]], Set[str]]:
+    consts: Dict[str, Set[str]] = {}
+    declared: Set[str] = set()
+    for m in models:
+        for name, vals in m.str_consts.items():
+            consts.setdefault(name, set()).update(vals)
+            declared |= vals
+        declared |= m.axis_literals
+    return consts, declared
+
+
+def lint_models(models: Sequence[_FileModel]) -> List[Diagnostic]:
+    project_consts, declared = _project_constants(models)
+    diags: List[Diagnostic] = []
+    for model in models:
+        out: List[Diagnostic] = []
+        in_kernels_tree = "kernels" in Path(model.path).parts
+        for fn in model.traced_nodes():
+            _check_traced_body(model, fn, out)
+            name = getattr(fn, "name", None)
+            if name in model.kernels and not in_kernels_tree:
+                _check_kernel_dtypes(model, fn, out)
+        if in_kernels_tree:
+            # whole-module scope: kernel helpers build tables/launch args
+            _check_kernel_dtypes(model, model.tree, out)
+        _check_pair_reductions(model, out)
+        _check_collective_axes(model, declared, project_consts, out)
+        _check_scatter_modes(model, out)
+        seen = set()
+        for d in out:
+            key = (d.line, d.col, d.code)
+            if key in seen or _suppressed(model, d):
+                continue
+            seen.add(key)
+            diags.append(d)
+    diags.sort(key=lambda d: (d.path, d.line, d.col, d.code))
+    return diags
+
+
+def lint_file(path: str) -> List[Diagnostic]:
+    src = Path(path).read_text()
+    return lint_models([_FileModel(str(path), src)])
+
+
+def lint_paths(paths: Iterable[str]) -> Tuple[List[Diagnostic], int]:
+    """Lint every ``*.py`` under ``paths``; returns (diagnostics, n_files).
+
+    The project is modeled jointly so that RA006's declared-axis set
+    spans all files (``AXES`` lives in ``core/md/domain.py`` but is
+    consumed across the tree).
+    """
+    files = iter_source_files(paths)
+    models = []
+    for f in files:
+        models.append(_FileModel(str(f), f.read_text()))
+    return lint_models(models), len(files)

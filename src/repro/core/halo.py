@@ -86,7 +86,7 @@ def _add_at(x: jnp.ndarray, axis: int, start: int, width: int,
             update: jnp.ndarray):
     idx = [slice(None)] * x.ndim
     idx[axis] = slice(start, start + width)
-    return x.at[tuple(idx)].add(update)
+    return x.at[tuple(idx)].add(update)  # noqa: RA007 — all-slice index
 
 
 class _Shifter:

@@ -208,7 +208,7 @@ class PallasBackend(HaloBackend):
                                             interpret=plan.spec.interpret)
             except Exception:  # pragma: no cover - backend-specific
                 plan._pallas_broken = True
-        return dst2d.at[jidx].add(rows)
+        return dst2d.at[jidx].add(rows, mode="drop")
 
     # -- static index maps (built once per local shape, cached) ------------
 
@@ -491,9 +491,11 @@ class HaloPlan:
         self.spec = spec
         self.mesh = mesh
         self.backend = get_backend(spec.backend)
-        self.sched: PulseSchedule = make_schedule(spec.axis_names,
-                                                  spec.widths,
-                                                  pulses_per_dim=spec.pulses)
+        # config check first: nonsense (widths, pulses) combinations fail
+        # here with an actionable message instead of deep in tracing
+        from repro.analysis.schedule_verifier import check_halo_config
+        self.sched: PulseSchedule = check_halo_config(
+            spec.axis_names, spec.widths, spec.pulses)
         self.axis_sizes: Tuple[int, ...] = tuple(
             int(mesh.shape[a]) for a in spec.axis_names)
         # per-dim ppermute pairs, precomputed once (the plan's PulseData)

@@ -121,7 +121,8 @@ class MDEngine:
                  nstprune: int = 0,
                  inner_radius: float | None = None,
                  inner_safety: float = 1.5,
-                 pair_bucket: int = PAIR_BUCKET):
+                 pair_bucket: int = PAIR_BUCKET,
+                 verify: str = "error"):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -226,6 +227,23 @@ class MDEngine:
                                 feature_elems=4 * self.layout.capacity),
             mesh)
         self._spec = P(*AXES)
+        # build-time gate: config sanity (nstprune vs block length, list
+        # radii, pool/capacity factors) plus a static replay of the comm
+        # schedule every block program will emit — unsafe configs are
+        # rejected here with a counterexample trace instead of failing
+        # deep in tracing (or corrupting trajectories silently).
+        # ``verify="warn"`` downgrades to warnings, ``"off"`` skips.
+        self._verify = verify
+        from repro.analysis.schedule_verifier import gate_md_build
+        self.schedule_report = gate_md_build(
+            nstlist=int(system.params.nstlist), nstprune=self.nstprune,
+            pipeline=self.pipeline_mode,
+            pipeline_depth=self.pipeline_depth,
+            overlap_rebin=self.overlap_rebin,
+            force_backend=self.force_backend,
+            n_pulses=max(1, self.plan.sched.total_pulses), verify=verify,
+            inner_safety=self.inner_safety, r_list_factor=r_list_factor,
+            mig_frac=mig_frac, capacity_safety=capacity_safety)
         self._build_programs()
 
     @property
@@ -393,9 +411,13 @@ class MDEngine:
 
     def _build_programs(self):
         layout, mig_cap = self.layout, self.mig_cap
+        # verify="off": the engine's own gate already verified a superset
+        # (block length, nstprune sub-blocks, rebin fusion) of what the
+        # pipeline-level gate would re-probe
         self.pipeline = StepPipeline.build(self.plan, self._make_step_fns(),
                                            mode=self.pipeline_mode,
-                                           depth=self.pipeline_depth)
+                                           depth=self.pipeline_depth,
+                                           verify="off")
 
         def block(cell_f, cell_i, force, n_steps):
             ctx = self._block_ctx(cell_i)

@@ -449,7 +449,7 @@ def _pair_forces_jnp(a, b, ta, tb, same, cnt_a, cnt_b, ff: ForceField):
     fvec = lax.optimization_barrier(fac[..., None] * dx)
     fa = lax.optimization_barrier(jnp.sum(fvec, axis=2))
     fb = lax.optimization_barrier(-jnp.sum(fvec, axis=1))
-    return fa, fb, jnp.sum(pe, axis=(1, 2))
+    return fa, fb, lax.optimization_barrier(jnp.sum(pe, axis=(1, 2)))
 
 
 # pallas kernel availability is probed once and latched, mirroring
@@ -539,8 +539,8 @@ def _eval_schedule(ext_f, ext_i, layout: CellLayout, ff: ForceField, *,
             fa, fb, pe_pairs = _pair_forces_jnp(a, b, ta, tb, same,
                                                 cnt_a, cnt_b, ff)
             F = jnp.zeros((ne + 1, k_t, 3), ext_f.dtype)
-            F = F.at[ca].add(fa)
-            F = F.at[cb].add(fb)
+            F = F.at[ca].add(fa, mode="drop")
+            F = F.at[cb].add(fb, mode="drop")
         F_acc = F_acc.at[:, :k_t].add(F)
         pe_total = pe_total + jnp.sum(pe_pairs)
     F_out = lax.optimization_barrier(F_acc[:ne])

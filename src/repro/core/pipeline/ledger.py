@@ -85,14 +85,15 @@ class SignalLedger:
         idx = self._idx(kind, buf)
         outstanding = st.released[idx] - st.acquired[idx]
         clobbers = st.clobbers.at[idx].add(
-            (outstanding >= 1).astype(jnp.int32))
-        return LedgerState(st.released.at[idx].add(1), st.acquired,
-                           clobbers)
+            (outstanding >= 1).astype(jnp.int32), mode="drop")
+        return LedgerState(st.released.at[idx].add(1, mode="drop"),
+                           st.acquired, clobbers)
 
     def acquire(self, st: LedgerState, kind: str, buf) -> LedgerState:
         """All of (kind, buf)'s pulse signals are consumed (acquire_wait)."""
         return LedgerState(st.released,
-                           st.acquired.at[self._idx(kind, buf)].add(1),
+                           st.acquired.at[self._idx(kind, buf)].add(
+                               1, mode="drop"),
                            st.clobbers)
 
     def _idx(self, kind: str, buf) -> jnp.ndarray:

@@ -97,7 +97,8 @@ class StepPipeline:
     """Construct-once multi-step program over one :class:`HaloPlan`."""
 
     def __init__(self, plan: HaloPlan, fns: StepFns,
-                 mode: str = "double_buffer", depth: int = 2):
+                 mode: str = "double_buffer", depth: int = 2,
+                 verify: str = "error"):
         if mode not in PIPELINE_MODES:
             raise ValueError(f"unknown pipeline mode {mode!r}; "
                              f"available: {PIPELINE_MODES}")
@@ -109,11 +110,21 @@ class StepPipeline:
         self.depth = int(depth) if mode == "double_buffer" else 1
         self.ledger = SignalLedger(depth=self.depth,
                                    n_pulses=max(1, plan.sched.total_pulses))
+        # build-time gate: statically replay the release/acquire schedule
+        # this (mode, depth, pulses) config will emit and reject it with a
+        # counterexample event trace if any slot state is unsafe.
+        # ``verify="warn"`` downgrades to a warning, ``"off"`` skips.
+        from repro.analysis.schedule_verifier import gate_pipeline_build
+        self.schedule_report = gate_pipeline_build(
+            mode=self.mode, depth=self.depth,
+            n_pulses=self.ledger.n_pulses, backend=plan.spec.backend,
+            verify=verify)
 
     @classmethod
     def build(cls, plan: HaloPlan, fns: StepFns, *,
-              mode: str = "double_buffer", depth: int = 2) -> "StepPipeline":
-        return cls(plan, fns, mode=mode, depth=depth)
+              mode: str = "double_buffer", depth: int = 2,
+              verify: str = "error") -> "StepPipeline":
+        return cls(plan, fns, mode=mode, depth=depth, verify=verify)
 
     # -- execution (device-local: call inside the engine's shard_map) ------
 

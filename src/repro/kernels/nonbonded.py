@@ -215,6 +215,6 @@ def pair_forces_accum(a, b, ta, tb, same, cell_a, cell_b, ff: ForceField,
                           interpret=interpret)
     else:
         F = jnp.zeros((n_cells, fa.shape[1], 3), fa.dtype)
-        F = F.at[cell_a].add(fa)
-        F = F.at[cell_b].add(fb)
+        F = F.at[cell_a].add(fa, mode="drop")
+        F = F.at[cell_b].add(fb, mode="drop")
     return F, pe

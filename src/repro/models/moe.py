@@ -84,7 +84,7 @@ def _route(x2d, router_w, m: MoECfg):
     T = x2d.shape[0]
     density = jnp.mean(gates_full, axis=0)
     counts = jnp.zeros((m.n_experts,), jnp.float32).at[top_e.reshape(-1)] \
-        .add(1.0) / (T * m.top_k)
+        .add(1.0, mode="drop") / (T * m.top_k)
     lb_loss = m.n_experts * jnp.sum(density * counts)
     z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
     return top_e, top_g, {"moe_lb": lb_loss, "moe_z": z_loss}
@@ -127,7 +127,8 @@ def _scatter_tokens(x2d, slot, keep, n_experts, capacity, K):
     buf = jnp.zeros((n_experts * capacity + 1, d), x2d.dtype)
     src = jnp.repeat(x2d, K, axis=0)
     slot = jnp.minimum(slot, n_experts * capacity)
-    buf = buf.at[slot].add(jnp.where(keep[:, None], src, 0.0))
+    buf = buf.at[slot].add(jnp.where(keep[:, None], src, 0.0),
+                           mode="drop")
     return buf[:-1].reshape(n_experts, capacity, d)
 
 

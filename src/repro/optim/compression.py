@@ -50,7 +50,7 @@ def _topk_reduce(g, axis: str, frac: float):
     npods = vg.shape[0]
     acc = jnp.zeros((n,), jnp.float32)
     for p in range(npods):                             # npods is tiny (2)
-        acc = acc.at[ig[p]].add(vg[p])
+        acc = acc.at[ig[p]].add(vg[p], mode="drop")
     out = (acc / npods).reshape(g.shape)
     err = flat.at[idx].set(0.0).reshape(g.shape)
     return out, err

@@ -1,0 +1,16 @@
+"""RA001 fixture: host syncs inside a traced scan body."""
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    total = float(jnp.sum(x))          # RA001: concretizes a tracer
+    host = np.asarray(carry)           # RA001: pulls the carry to host
+    peek = carry.item()                # RA001: device->host round-trip
+    flat = x.tolist()                  # RA001: ditto
+    return carry + total + host, (peek, flat)
+
+
+def run(xs):
+    return lax.scan(body, jnp.float32(0.0), xs)

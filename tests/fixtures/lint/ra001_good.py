@@ -1,0 +1,13 @@
+"""RA001 fixture (clean): everything stays on device in the scan body."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    total = jnp.sum(x)
+    return carry + total, total
+
+
+def run(xs):
+    state, totals = lax.scan(body, jnp.float32(0.0), xs)
+    return float(state)                # host read outside the traced body

@@ -1,0 +1,16 @@
+"""RA002 fixture: Python control flow branching on traced values."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    if jnp.any(x > 0):                 # RA002: trace-time branch
+        carry = carry + 1.0
+    while jnp.sum(carry) < 10.0:       # RA002: trace-time loop
+        carry = carry * 2.0
+    assert jnp.all(carry >= 0.0)       # RA002: trace-time assert
+    return carry, carry
+
+
+def run(xs):
+    return lax.scan(body, jnp.float32(0.0), xs)

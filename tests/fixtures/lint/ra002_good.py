@@ -1,0 +1,17 @@
+"""RA002 fixture (clean): traced branches via lax.cond / jnp.where."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    carry = lax.cond(jnp.any(x > 0), lambda c: c + 1.0,
+                     lambda c: c, carry)
+    carry = jnp.where(carry < 0.0, 0.0, carry)
+    return carry, carry
+
+
+def run(xs, n_steps):
+    # Python control flow on *static* values is fine
+    if n_steps < 1:
+        raise ValueError("n_steps must be >= 1")
+    return lax.scan(body, jnp.float32(0.0), xs)

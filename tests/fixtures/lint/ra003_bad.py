@@ -1,0 +1,15 @@
+"""RA003 fixture: host side effects inside a traced cond branch."""
+import warnings
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def on_true(c):
+    print("took the true branch", c)               # RA003: trace-time only
+    warnings.warn("this fires once at trace time")  # RA003
+    return c + 1.0
+
+
+def run(flag, c):
+    return lax.cond(flag, on_true, lambda c: c, c)

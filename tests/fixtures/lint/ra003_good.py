@@ -1,0 +1,15 @@
+"""RA003 fixture (clean): jax.debug.print runs per execution, not trace."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def on_true(c):
+    jax.debug.print("took the true branch {c}", c=c)
+    return c + 1.0
+
+
+def run(flag, c):
+    out = lax.cond(flag, on_true, lambda c: c, c)
+    print("host-side summary:", out)   # outside the traced function
+    return out

@@ -1,0 +1,9 @@
+"""RA004 fixture: dtype-less constructors inside a pallas kernel."""
+import jax.numpy as jnp
+
+
+def scale_kernel(x_ref, o_ref):
+    acc = jnp.zeros((8, 128))              # RA004: weak-typed accumulator
+    ramp = jnp.arange(0.0, 8.0)            # RA004: float bounds, no dtype
+    fill = jnp.full((8,), 0.5)             # RA004: weak-typed fill
+    o_ref[...] = x_ref[...] + acc + ramp[:, None] + fill[:, None]

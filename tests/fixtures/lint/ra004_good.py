@@ -1,0 +1,9 @@
+"""RA004 fixture (clean): every kernel constructor pins its dtype."""
+import jax.numpy as jnp
+
+
+def scale_kernel(x_ref, o_ref):
+    acc = jnp.zeros((8, 128), jnp.float32)
+    ramp = jnp.arange(0.0, 8.0, dtype=jnp.float32)
+    fill = jnp.full((8,), 0.5, jnp.float32)
+    o_ref[...] = x_ref[...] + acc + ramp[:, None] + fill[:, None]

@@ -1,0 +1,13 @@
+"""RA005 fixture: unpinned axis-reduction downstream of pair_terms."""
+import jax.numpy as jnp
+
+
+def pair_terms(d2, slot_a, slot_b):
+    return jnp.exp(-d2), d2, -d2
+
+
+def tile_energy(R, pairs):
+    d2 = jnp.sum(R * R, axis=-1)       # upstream of pair_terms: fine
+    e, fa, fb = pair_terms(d2, pairs, pairs)
+    pe = jnp.sum(e, axis=(1, 2))       # RA005: fusion-order dependent
+    return pe, fa, fb

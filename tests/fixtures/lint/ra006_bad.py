@@ -1,0 +1,12 @@
+"""RA006 fixture: collective over an axis name nothing declares."""
+import jax.numpy as jnp
+from jax import lax
+
+AXES = ("rows", "cols")
+
+
+def reduce_tile(x):
+    good = lax.psum(x, "rows")
+    bad = lax.pmean(x, "ghost")        # RA006: no mesh declares "ghost"
+    idx = lax.axis_index("phantom")    # RA006: ditto
+    return good + bad + idx

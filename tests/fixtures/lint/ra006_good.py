@@ -1,0 +1,12 @@
+"""RA006 fixture (clean): every collective axis is declared."""
+import jax.numpy as jnp
+from jax import lax
+
+AXES = ("rows", "cols")
+
+
+def reduce_tile(x, axis_name):
+    a = lax.psum(x, "rows")
+    b = lax.pmean(x, AXES)
+    c = lax.psum(x, axis_name)         # runtime-parameterized: skipped
+    return a + b + c

@@ -1,0 +1,8 @@
+"""RA007 fixture: dynamic scatter-accumulate without explicit mode."""
+import jax.numpy as jnp
+
+
+def bin_forces(F, cell_idx, fa):
+    F = F.at[cell_idx].add(fa)         # RA007: implicit OOB semantics
+    F = F.at[cell_idx].max(fa)         # RA007: ditto
+    return F

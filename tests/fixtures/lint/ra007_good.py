@@ -1,0 +1,9 @@
+"""RA007 fixture (clean): explicit mode= / static indices."""
+import jax.numpy as jnp
+
+
+def bin_forces(F, cell_idx, fa):
+    F = F.at[cell_idx].add(fa, mode="drop")   # sentinel rows drop
+    F = F.at[0].add(fa[0])                    # static index: fine
+    F = F.at[:, 1].add(fa)                    # slice index: fine
+    return F

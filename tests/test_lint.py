@@ -1,0 +1,126 @@
+"""Golden-file tests for the JAX/Pallas hazard linter (RA001..RA007).
+
+Each rule is proven by a failing ``tests/fixtures/lint/raXXX_bad.py``
+fixture and a clean ``raXXX_good.py`` counterpart; the repo's own
+``src/repro`` tree must lint clean (the baseline the CI
+``static-analysis`` job enforces), and ``# noqa`` suppression must work
+both bare and code-scoped.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, lint_file, lint_paths
+from repro.analysis.__main__ import main as analysis_main
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+REPO_SRC = Path(__file__).parents[1] / "src" / "repro"
+
+# every rule and the finding count its bad fixture must produce
+EXPECTED_BAD = {
+    "RA001": 4,    # float(jnp...), np.asarray, .item(), .tolist()
+    "RA002": 3,    # if / while / assert on traced values
+    "RA003": 2,    # print, warnings.warn in a traced branch
+    "RA004": 3,    # zeros / arange / full without dtype in a kernel
+    "RA005": 1,    # unpinned pair reduction
+    "RA006": 2,    # pmean over "ghost", axis_index over "phantom"
+    "RA007": 2,    # .at[idx].add / .at[idx].max without mode=
+}
+
+
+def test_rule_table_is_complete():
+    assert set(RULES) == set(EXPECTED_BAD)
+    assert len(RULES) >= 6                 # the acceptance floor
+    for code, rule in RULES.items():
+        assert rule.code == code and rule.name and rule.summary
+
+
+@pytest.mark.parametrize("code", sorted(EXPECTED_BAD))
+def test_bad_fixture_fails_its_rule(code):
+    path = FIXTURES / f"{code.lower()}_bad.py"
+    diags = lint_file(str(path))
+    hits = [d for d in diags if d.code == code]
+    assert len(hits) == EXPECTED_BAD[code], [d.format() for d in diags]
+    # no cross-contamination: a fixture only trips its own rule
+    assert {d.code for d in diags} == {code}
+    for d in hits:
+        assert d.path.endswith(f"{code.lower()}_bad.py")
+        assert d.line > 0 and d.col >= 0
+        assert f"{d.path}:{d.line}:{d.col}: {code}" in d.format()
+
+
+@pytest.mark.parametrize("code", sorted(EXPECTED_BAD))
+def test_good_fixture_is_clean(code):
+    path = FIXTURES / f"{code.lower()}_good.py"
+    assert lint_file(str(path)) == []
+
+
+def test_noqa_suppression(tmp_path):
+    bad = (FIXTURES / "ra007_bad.py").read_text().splitlines()
+    # scope one line to its code, blanket-suppress the other
+    patched = []
+    for ln in bad:
+        if ".add(fa)" in ln:
+            ln = ln.split("#")[0].rstrip() + "  # noqa: RA007"
+        elif ".max(fa)" in ln:
+            ln = ln.split("#")[0].rstrip() + "  # noqa"
+        patched.append(ln)
+    p = tmp_path / "suppressed.py"
+    p.write_text("\n".join(patched) + "\n")
+    assert lint_file(str(p)) == []
+    # a noqa for a different code does NOT suppress
+    p2 = tmp_path / "wrong_code.py"
+    p2.write_text("\n".join(
+        ln.replace("# noqa: RA007", "# noqa: RA001") for ln in patched
+    ) + "\n")
+    assert [d.code for d in lint_file(str(p2))] == ["RA007"]
+
+
+def test_repo_tree_lints_clean():
+    """Satellite 1's contract: the shipped src/repro is a clean baseline."""
+    diags, n_files = lint_paths([str(REPO_SRC)])
+    assert n_files > 50
+    assert diags == [], "\n".join(d.format() for d in diags)
+
+
+def test_lint_paths_aggregates_project_constants():
+    """RA006 resolution is project-wide: an axis constant declared in one
+    module legitimizes collectives in another."""
+    diags, _ = lint_paths([str(FIXTURES / "ra006_bad.py"),
+                           str(FIXTURES / "ra006_good.py")])
+    assert [d.code for d in diags] == ["RA006", "RA006"]
+
+
+# --------------------------------------------------------------------------
+# the CLI entry point (what CI runs)
+# --------------------------------------------------------------------------
+
+def test_cli_exits_nonzero_on_findings(capsys):
+    rc = analysis_main([str(FIXTURES / "ra001_bad.py"), "--no-verify"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "RA001" in out and "[host-sync-in-traced]" in out
+
+
+def test_cli_clean_run_writes_report(tmp_path, capsys):
+    import json
+
+    report = tmp_path / "out" / "analysis_report.json"
+    rc = analysis_main([str(FIXTURES / "ra001_good.py"),
+                        "--report", str(report)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 finding(s)" in out
+    assert "0 unsafe, 0 rejected" in out      # the PR4+PR5 grids
+    payload = json.loads(report.read_text())
+    assert payload["lint"]["n_findings"] == 0
+    assert payload["verifier"]["all_safe"] is True
+    assert payload["verifier"]["n_configs"] == 58
+    assert set(payload["lint"]["rules"]) == set(RULES)
+
+
+def test_cli_rules_table(capsys):
+    assert analysis_main(["--rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULES:
+        assert code in out

@@ -1,0 +1,388 @@
+"""Static comm-schedule verifier: grids, rejections, gates, replay parity.
+
+Locks in the PR's static-analysis tentpole:
+
+* every cell of the PR4 conformance matrix and the PR5 prune grid is
+  statically SAFE (the same grids CI verifies via ``python -m
+  repro.analysis``);
+* an over-deep window (``window > depth``) is statically rejected with a
+  ``SLOT_CLOBBER`` counterexample event trace;
+* dropping the per-step ``optimization_barrier`` pin on a skew-2 window
+  is caught by the happens-before pass (``UNORDERED_REUSE``) even though
+  the linear replay alone would pass it;
+* the config checks reject nonsense ``HaloSpec``/``MDEngine`` shapes
+  with actionable messages (and preserve ``make_schedule``'s wording);
+* the ``verify=`` build gates error / warn / skip as documented, on both
+  ``StepPipeline.build`` and ``MDEngine``;
+* the static verdict agrees with a runtime :class:`SignalLedger` replay
+  of the extracted event sequence (property-based when ``hypothesis`` is
+  installed).
+"""
+import warnings
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.analysis import grids
+from repro.analysis.schedule_verifier import (
+    MODES,
+    ConfigError,
+    ScheduleConfig,
+    ScheduleVerificationError,
+    check_halo_config,
+    check_md_config,
+    extract_events,
+    gate_md_build,
+    gate_pipeline_build,
+    probe_steps,
+    verify_build,
+    verify_schedule,
+)
+
+
+# --------------------------------------------------------------------------
+# the shipped grids are exhaustively safe
+# --------------------------------------------------------------------------
+
+PR4 = grids.pr4_grid()
+PR5 = grids.pr5_prune_grid()
+
+
+def _cfg_id(c):
+    return (f"{c.backend}-{c.mode}-d{c.depth}-p{c.n_pulses}"
+            f"-np{c.nstprune}-ovr{int(c.overlap_rebin)}")
+
+
+def test_pr4_grid_shape():
+    """48 cells: 4 backends x 2 modes x 2 widths x 3 depths."""
+    assert len(PR4) == 48
+    assert {c.backend for c in PR4} == set(grids.PR4_BACKENDS)
+    assert all(c.n_steps == grids.PR4_STEPS for c in PR4)
+
+
+@pytest.mark.parametrize("cfg", PR4, ids=[_cfg_id(c) for c in PR4])
+def test_pr4_grid_statically_safe(cfg):
+    report = verify_schedule(cfg)
+    assert report.safe, report.counterexample()
+    assert report.violations == ()
+    assert report.counterexample() == ""
+    # every deposit consumed: releases balance acquires, ring never
+    # holds more than one deposit per slot
+    assert report.stats["releases"] == report.stats["acquires"]
+    assert report.stats["max_in_flight"] == 1
+
+
+@pytest.mark.parametrize("cfg", PR5, ids=[_cfg_id(c) for c in PR5])
+def test_pr5_prune_grid_statically_safe(cfg):
+    report = verify_schedule(cfg)
+    assert report.safe, report.counterexample()
+    assert report.stats["releases"] == report.stats["acquires"]
+    if cfg.nstprune:
+        # nstlist=20 / nstprune=4 -> five fresh-ledger sub-blocks
+        # (+1 rebin segment when the overlap region is fused on)
+        assert report.stats["n_segments"] == 5 + int(cfg.overlap_rebin)
+
+
+def test_probe_steps_cover_ring_phase_space():
+    """Probes reach past 2*depth (every (phase, drain) pair) and always
+    include the caller's nstlist and the prune split points."""
+    ps = probe_steps(3, nstprune=4, n_steps=20)
+    assert set(range(1, 10)) <= set(ps)
+    assert {4, 5, 9, 20} <= set(ps)
+
+
+def test_verify_build_safe_over_all_probes():
+    rep = verify_build(mode="double_buffer", depth=4, n_pulses=3)
+    assert rep.safe
+
+
+# --------------------------------------------------------------------------
+# unsafe schedules: over-deep window, missing step barrier
+# --------------------------------------------------------------------------
+
+def test_over_deep_window_rejected_with_counterexample():
+    """window > depth reuses a slot before its deposit drains: the
+    verifier must find the clobber and show the offending event pair."""
+    report = verify_schedule(ScheduleConfig(depth=2, window=3, n_steps=8))
+    assert not report.safe
+    first = report.violations[0]
+    assert first.code == "SLOT_CLOBBER"
+    assert "still-outstanding deposit" in first.message
+    cx = report.counterexample()
+    assert "SLOT_CLOBBER" in cx
+    assert "clobbers the deposit" in cx
+    # the trace marks both the clobbered release and the clobbering one
+    marked = [ln for ln in first.trace if ln.startswith(">>")]
+    assert len(marked) == 2
+    assert all("release rev" in ln for ln in marked)
+
+
+@pytest.mark.parametrize("depth", (2, 3, 4))
+def test_window_within_depth_is_safe(depth):
+    for w in range(1, depth + 1):
+        rep = verify_schedule(ScheduleConfig(depth=depth, window=w,
+                                             n_steps=2 * depth + 3))
+        assert rep.safe, (depth, w, rep.counterexample())
+
+
+def test_unbarriered_skew2_fails_happens_before():
+    """depth=3 window=2 passes the linear replay — only the per-step
+    ``optimization_barrier`` pin orders the slot reuse behind the
+    previous acquire.  Dropping the barrier must flip the verdict."""
+    pinned = verify_schedule(ScheduleConfig(depth=3, window=2, n_steps=8))
+    assert pinned.safe
+    loose = verify_schedule(ScheduleConfig(depth=3, window=2, n_steps=8,
+                                           step_barrier=False))
+    assert not loose.safe
+    assert {v.code for v in loose.violations} == {"UNORDERED_REUSE"}
+    assert "no happens-before path" in loose.violations[0].message
+
+
+def test_report_to_dict_roundtrips_config():
+    rep = verify_schedule(ScheduleConfig(depth=2, window=3, n_steps=6))
+    d = rep.to_dict()
+    assert d["safe"] is False
+    assert d["config"]["window"] == 3
+    assert d["violations"][0]["code"] == "SLOT_CLOBBER"
+    assert isinstance(d["violations"][0]["trace"], list)
+
+
+# --------------------------------------------------------------------------
+# config validation (ConfigError regressions)
+# --------------------------------------------------------------------------
+
+def test_modes_in_sync_with_pipeline():
+    """The verifier keeps a jax-free copy of PIPELINE_MODES; they must
+    never drift."""
+    from repro.core.pipeline import PIPELINE_MODES
+    assert MODES == PIPELINE_MODES
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(mode="triple"), "unknown pipeline mode"),
+    (dict(mode="double_buffer", depth=1), "depth >= 2"),
+    (dict(depth=0), "depth must be >= 1"),
+    (dict(n_steps=0), "n_steps must be >= 1"),
+    (dict(window=0), "acquire skew"),
+    (dict(n_pulses=0), "n_pulses must be >= 1"),
+    (dict(nstprune=-1), "nstprune must be >= 0"),
+])
+def test_schedule_config_validation(kw, match):
+    with pytest.raises(ConfigError, match=match):
+        verify_schedule(ScheduleConfig(**kw))
+
+
+def test_check_halo_config_rejections():
+    with pytest.raises(ConfigError, match="duplicate mesh axis"):
+        check_halo_config(("z", "z"), (1, 1))
+    with pytest.raises(ConfigError, match="widths must be >= 0"):
+        check_halo_config(("z",), (-1,))
+    # make_schedule's own rejections surface with their original wording
+    with pytest.raises(ConfigError, match="equal length"):
+        check_halo_config(("z", "y"), (1,))
+    with pytest.raises(ConfigError, match="at least one pulse"):
+        check_halo_config(("z",), (1,), pulses=(0,))
+    # and the happy path returns the pulse schedule
+    sched = check_halo_config(("z", "y"), (2, 1))
+    assert sched.total_pulses >= 2
+
+
+def test_from_spec_derives_pulses_and_rejects():
+    cfg = ScheduleConfig.from_spec(("z", "y", "x"), (1, 1, 1))
+    assert cfg.n_pulses == 3
+    with pytest.raises(ConfigError, match="duplicate mesh axis"):
+        ScheduleConfig.from_spec(("z", "z"), (1, 1))
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(nstlist=0), "nstlist must be >= 1"),
+    (dict(nstprune=25), "exceeds the nstlist block length"),
+    (dict(nstprune=4, inner_safety=0.0), "inner_safety must be > 0"),
+    (dict(r_list_factor=0.9), "r_list_factor must be >= 1"),
+    (dict(mig_frac=0.0), "mig_frac must be > 0"),
+    (dict(capacity_safety=0.5), "capacity_safety must be >= 1"),
+])
+def test_check_md_config_rejections(kw, match):
+    base = dict(nstlist=20, nstprune=0, pipeline="double_buffer",
+                pipeline_depth=2, overlap_rebin=False,
+                force_backend="sparse")
+    base.update(kw)
+    with pytest.raises(ConfigError, match=match):
+        check_md_config(**base)
+
+
+def test_check_md_config_returns_realized_schedule():
+    cfg = check_md_config(nstlist=20, nstprune=4, pipeline="double_buffer",
+                          pipeline_depth=3, overlap_rebin=True,
+                          force_backend="sparse")
+    assert cfg == ScheduleConfig(mode="double_buffer", depth=3,
+                                 n_steps=20, nstprune=4,
+                                 overlap_rebin=True,
+                                 force_backend="sparse")
+    assert verify_schedule(cfg).safe
+
+
+# --------------------------------------------------------------------------
+# build gates: error / warn / off
+# --------------------------------------------------------------------------
+
+def test_gate_pipeline_build_error_carries_report():
+    with pytest.raises(ScheduleVerificationError) as ei:
+        gate_pipeline_build(mode="double_buffer", depth=2, n_pulses=1,
+                            backend="signal", window=3)
+    assert "SLOT_CLOBBER" in str(ei.value)
+    assert "clobbers the deposit" in str(ei.value)   # trace is embedded
+    assert not ei.value.report.safe
+
+
+def test_gate_pipeline_build_warn_and_off():
+    with pytest.warns(RuntimeWarning, match="statically unsafe"):
+        rep = gate_pipeline_build(mode="double_buffer", depth=2,
+                                  n_pulses=1, backend="signal",
+                                  window=3, verify="warn")
+    assert rep is not None and not rep.safe
+    assert gate_pipeline_build(mode="double_buffer", depth=2, n_pulses=1,
+                               backend="signal", window=3,
+                               verify="off") is None
+    with pytest.raises(ValueError, match="unknown verify mode"):
+        gate_pipeline_build(mode="off", depth=2, n_pulses=1,
+                            backend="signal", verify="loud")
+
+
+def test_gate_pipeline_build_safe_config_reports():
+    rep = gate_pipeline_build(mode="double_buffer", depth=3, n_pulses=2,
+                              backend="pallas")
+    assert rep.safe
+
+
+def test_gate_md_build_rejects_and_warns():
+    bad = dict(nstlist=20, nstprune=25, pipeline="double_buffer",
+               pipeline_depth=2, overlap_rebin=False,
+               force_backend="sparse")
+    with pytest.raises(ConfigError, match="exceeds the nstlist"):
+        gate_md_build(**bad)
+    with pytest.warns(RuntimeWarning, match="rejected by the static"):
+        assert gate_md_build(**bad, verify="warn") is None
+    assert gate_md_build(**bad, verify="off") is None
+    good = dict(bad, nstprune=4)
+    assert gate_md_build(**good).safe
+
+
+def test_step_pipeline_build_gate_integration():
+    """The real ``StepPipeline.build`` runs the gate and records the
+    report; ``verify='off'`` skips it."""
+    from repro.core.halo_plan import HaloPlan, HaloSpec
+    from repro.core.pipeline import StepPipeline
+    from repro.launch.mesh import make_mesh
+    from test_pipeline import _toy_fns
+
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(HaloSpec(("z",), (1,)), mesh)
+    pipe = StepPipeline.build(plan, _toy_fns(), mode="double_buffer",
+                              depth=3)
+    assert pipe.schedule_report is not None and pipe.schedule_report.safe
+    off = StepPipeline.build(plan, _toy_fns(), mode="off", verify="off")
+    assert off.schedule_report is None
+
+
+def test_halo_plan_rejects_duplicate_axes():
+    from repro.core.halo_plan import HaloPlan, HaloSpec
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("z", "y"))
+    with pytest.raises(ConfigError, match="duplicate mesh axis"):
+        HaloPlan.build(HaloSpec(("z", "z"), (1, 1)), mesh)
+
+
+def test_md_engine_gate_rejects_before_tracing():
+    """A nonsense engine config fails fast in ``__init__`` — the gate
+    fires before any program is built or traced."""
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+
+    sys_ = make_grappa_like(512, seed=0)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    with pytest.raises(ConfigError, match="exceeds the nstlist"):
+        MDEngine(sys_, mesh, force_backend="sparse", nstprune=25)
+    with pytest.raises(ConfigError, match="r_list_factor"):
+        MDEngine(sys_, mesh, force_backend="sparse", nstprune=4,
+                 r_list_factor=0.5)
+
+
+# --------------------------------------------------------------------------
+# static verdict == runtime SignalLedger replay
+# --------------------------------------------------------------------------
+
+def _replay_through_ledger(cfg):
+    """Feed each segment's ledgered events through a real SignalLedger
+    (fresh per segment, as run_local re-inits) and collect summaries."""
+    from repro.core.pipeline.ledger import SignalLedger
+
+    out = []
+    for seg in extract_events(cfg):
+        led = SignalLedger(depth=cfg.ring_depth, n_pulses=cfg.n_pulses)
+        st_ = led.init()
+        for ev in seg.events:
+            if not ev.ledgered:
+                continue
+            if ev.op == "release":
+                st_ = led.release(st_, ev.kind, ev.slot)
+            else:
+                st_ = led.acquire(st_, ev.kind, ev.slot)
+        out.append((seg, led, led.summary(st_)))
+    return out
+
+
+@pytest.mark.parametrize("cfg", [
+    ScheduleConfig(mode="off", n_steps=5),
+    ScheduleConfig(depth=2, n_steps=8),
+    ScheduleConfig(depth=3, n_steps=7, n_pulses=3),
+    ScheduleConfig(depth=4, n_steps=20, nstprune=4, overlap_rebin=True,
+                   force_backend="sparse"),
+    ScheduleConfig(depth=2, window=3, n_steps=8),       # unsafe
+], ids=["off", "d2", "d3-p3", "prune-rebin", "overdeep"])
+def test_static_verdict_matches_ledger_replay(cfg):
+    report = verify_schedule(cfg)
+    clobbers = total_in_flight = 0
+    for seg, led, summary in _replay_through_ledger(cfg):
+        assert summary["consistent"]
+        clobbers += summary["clobbers"]
+        total_in_flight += summary["in_flight"]
+    static_clobbers = sum(1 for v in report.violations
+                          if v.code == "SLOT_CLOBBER")
+    # the ledger counts one clobber per pulse signal on the slot
+    assert clobbers == static_clobbers * cfg.n_pulses
+    if report.safe:
+        assert clobbers == 0 and total_in_flight == 0
+    else:
+        assert clobbers > 0 or total_in_flight > 0
+
+
+@given(depth=st.integers(2, 4), window=st.integers(1, 6),
+       n_steps=st.integers(1, 12), n_pulses=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_replay_agreement_property(depth, window, n_steps, n_pulses):
+    """For any drawn config the static SLOT_CLOBBER count equals the
+    runtime ledger's clobber counter, and a SAFE verdict implies the
+    ledger's window-safety + drain invariants hold."""
+    cfg = ScheduleConfig(depth=depth, window=window, n_steps=n_steps,
+                         n_pulses=n_pulses)
+    report = verify_schedule(cfg)
+    clobbers = in_flight = 0
+    for seg, led, summary in _replay_through_ledger(cfg):
+        clobbers += summary["clobbers"]
+        in_flight += summary["in_flight"]
+    static_clobbers = sum(1 for v in report.violations
+                          if v.code == "SLOT_CLOBBER")
+    assert clobbers == static_clobbers * n_pulses
+    if report.safe:
+        assert clobbers == 0 and in_flight == 0
+        assert all(s["window_safe"]
+                   for _, _, s in _replay_through_ledger(cfg))
+    if window > depth and n_steps > depth:
+        assert not report.safe          # over-deep windows never pass
