@@ -5,7 +5,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
@@ -31,17 +30,12 @@ def run_sub(script: str, *args: str, devices: int = 1,
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median-ish wall time per call in seconds (after warmup)."""
-    import jax
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    """Median wall time per call in seconds (after warmup).
+
+    Thin wrapper over :func:`repro.obs.time_fn` — the shared span/timer
+    API — keeping this module's historical float return."""
+    from repro.obs import time_fn as obs_time_fn
+    return obs_time_fn(fn, *args, warmup=warmup, iters=iters).median
 
 
 def emit(name: str, us_per_call: float, derived: str):

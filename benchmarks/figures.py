@@ -9,6 +9,7 @@ signals and are derived from the pulse schedule and compiled HLO.
 from __future__ import annotations
 
 import json
+from pathlib import Path
 
 import numpy as np
 
@@ -303,6 +304,90 @@ def nb_bench(smoke: bool = False):
     emit("nb/per_pair_bounds_beat_global_kexec", 0.0, str(ok_bounds))
 
 
+def pipeline_bench(smoke: bool = False, out: str = None):
+    """Perf-trajectory suite: backend x pipeline mode x depth cells ->
+    schema-versioned ``results/BENCH_pipeline.json``.
+
+    Each cell records step latency, the exposed-phase and overlapped-byte
+    columns of the overlap model, and the dual-list prune ratio — the
+    quantities the checked-in baseline gates (``python -m repro.obs gate``
+    in the CI ``perf-smoke`` job; tolerances live in the file's ``gate``
+    section, see :mod:`repro.obs.gate`).  One extra traced run writes a
+    metrics JSONL + Perfetto ``trace.json`` sample
+    (``results/obs/pipeline_smoke.jsonl`` / ``results/trace_pipeline.json``).
+
+    The committed baseline is the ``--smoke`` cell set (CI re-runs it
+    verbatim); ``--full`` adds the 8-device sweep for local trajectory
+    work without touching the gated file unless ``--out`` points at it.
+    """
+    from repro.obs import SCHEMA_VERSION, DEFAULT_GATE, export_trace
+
+    # (backend, pipeline, depth, nstprune)
+    grid = [("serialized", "off", 2, 0),
+            ("fused", "double_buffer", 2, 0),
+            ("pallas", "double_buffer", 3, 0),
+            ("signal", "double_buffer", 2, 4),
+            ("signal", "double_buffer", 3, 4),
+            ("signal", "double_buffer", 4, 4)]
+    cfgs = [(1, 600, 8)] if smoke else [(1, 600, 12), (8, 1800, 12)]
+    cells = []
+    for devices, n_atoms, steps in cfgs:
+        for backend, mode, depth, nstprune in grid:
+            tag = (f"pipeline/{devices}dev/{backend}/{mode}/d{depth}"
+                   + (f"/np{nstprune}" if nstprune else ""))
+            extra = ["--nstprune", str(nstprune)] if nstprune else []
+            try:
+                r = run_sub("md_worker.py", backend, str(n_atoms),
+                            str(steps), "--pipeline", mode,
+                            "--pipeline-depth", str(depth),
+                            "--force-backend", "sparse", *extra,
+                            devices=devices)
+            except RuntimeError as e:
+                emit(tag, -1, f"error={str(e)[:60]}")
+                continue
+            cells.append(r)
+            emit(tag, r["ms_per_step"] * 1e3,
+                 f"exposed_phases={r['exposed_phases']:.3g};"
+                 f"overlapped_bytes={r['overlapped_bytes']};"
+                 f"prune_ratio={r['prune_ratio']:.2f}")
+
+    # deeper windows must expose monotonically fewer phases per step
+    sweep = sorted((c["pipeline_depth"], c["exposed_phases"])
+                   for c in cells
+                   if c["mode"] == "signal" and c["devices"] == cfgs[0][0])
+    exposed_monotone = all(a[1] >= b[1]
+                           for a, b in zip(sweep, sweep[1:]))
+    emit("pipeline/exposed_phases_monotone_in_depth", 0.0,
+         str(exposed_monotone))
+
+    # traced sample: metrics JSONL -> Perfetto trace with measured +
+    # predicted lanes (CI uploads both as artifacts)
+    obs_jsonl = RESULTS / "obs" / "pipeline_smoke.jsonl"
+    trace_path = RESULTS / "trace_pipeline.json"
+    try:
+        run_sub("md_worker.py", "signal", str(cfgs[0][1]), "6",
+                "--pipeline", "double_buffer", "--pipeline-depth", "3",
+                "--force-backend", "sparse", "--nstprune", "4",
+                "--trace", "--obs-jsonl", str(obs_jsonl), devices=1)
+        trace = export_trace(obs_jsonl, trace_path)
+        emit("pipeline/trace_events", 0.0, str(len(trace["traceEvents"])))
+    except RuntimeError as e:
+        emit("pipeline/trace", -1, f"error={str(e)[:60]}")
+
+    doc = {
+        "suite": "pipeline",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": smoke,
+        "cells": cells,
+        "exposed_phases_monotone_in_depth": exposed_monotone,
+        "gate": DEFAULT_GATE,
+    }
+    path = Path(out) if out else RESULTS / "BENCH_pipeline.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1))
+    emit("pipeline/cells", 0.0, str(len(cells)))
+
+
 ALL = {
     "fig3": fig3_intranode_strong_scaling,
     "fig5": fig5_multinode_critical_path,
@@ -310,4 +395,5 @@ ALL = {
     "roofline": roofline_table,
     "lm": lm_microbench,
     "nb": nb_bench,
+    "pipeline": pipeline_bench,
 }

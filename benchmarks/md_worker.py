@@ -20,7 +20,6 @@ the rolling-prune columns); with ``--out`` the record is also written to
 """
 import argparse
 import json
-import time
 from pathlib import Path
 
 import jax
@@ -28,6 +27,7 @@ import jax
 from repro.core.halo_plan import HaloSpec
 from repro.core.md import MDEngine, force_backends, make_grappa_like
 from repro.launch.mesh import make_md_mesh
+from repro.obs import MetricsRegistry, span, time_fn
 
 
 def main():
@@ -59,6 +59,12 @@ def main():
     ap.add_argument("--out", default=None,
                     help="directory for the JSON record (e.g. "
                          "results/dryrun)")
+    ap.add_argument("--trace", action="store_true",
+                    help="thread per-step obs/* ledger counters through "
+                         "the block programs (barrier-neutral)")
+    ap.add_argument("--obs-jsonl", default=None,
+                    help="write the run's metrics-registry records here "
+                         "(input of `python -m repro.obs`)")
     args = ap.parse_args()
 
     system = make_grappa_like(args.n_atoms, seed=1)
@@ -68,27 +74,29 @@ def main():
                     backend=args.backend,
                     pulses=None if args.halo_pulses == 1
                     else (args.halo_pulses,) * 3)
+    reg = MetricsRegistry()
     eng = MDEngine(system, mesh, spec, pipeline=args.pipeline,
                    pipeline_depth=args.pipeline_depth,
                    overlap_rebin=args.overlap_rebin,
                    force_backend=args.force_backend,
                    capacity_safety=args.safety,
                    nstprune=args.nstprune,
-                   inner_radius=args.inner_radius)
+                   inner_radius=args.inner_radius,
+                   obs=reg, trace=args.trace)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
-    t0 = time.perf_counter()
-    state, _, _ = eng.simulate(args.steps, state=state, collect=False)
-    dt = (time.perf_counter() - t0) / args.steps
+    with span("simulate", reg, steps=args.steps) as sp:
+        state, _, _ = eng.simulate(args.steps, state=state, collect=False)
+        # the returned state is async-dispatched: block before the clock
+        # stops so the final block's tail is inside the measurement
+        sp.sync(state)
+    dt = sp.dur / args.steps
 
     # device-side decomposition (paper Fig. 6 analogue): time the force
     # pass (halo fwd + NB kernel + halo rev) through the selected backend
     cf, ci = state
-    jax.block_until_ready(eng.force_fn(cf, ci))     # compile outside timing
-    t0 = time.perf_counter()
-    for _ in range(10):
-        jax.block_until_ready(eng.force_fn(cf, ci))
-    t_force_pass = (time.perf_counter() - t0) / 10
+    t_force_pass = time_fn(eng.force_fn, cf, ci, warmup=1, iters=10,
+                           name="force_pass", registry=reg).median
 
     stats = eng.halo_stats()
     overlap = eng.overlap_stats()
@@ -143,6 +151,15 @@ def main():
         "dense_slot_pairs_per_step": pair["dense_slot_pairs"],
         "pairs_per_s": pair["evaluated_slot_pairs"] * n_dev / dt,
     }
+    reg.emit("bench", **record)
+    if args.obs_jsonl:
+        if args.trace:
+            # a short collected run so the per-step obs/* ledger counters
+            # land in the JSONL (off the timed path above)
+            eng.simulate(min(args.steps, 8), state=state, collect=True)
+        path = Path(args.obs_jsonl)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        reg.to_jsonl(path)
     print(json.dumps(record))
     if args.out:
         out_dir = Path(args.out)

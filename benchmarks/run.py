@@ -4,11 +4,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
   PYTHONPATH=src python -m benchmarks.run --suite nb [--smoke]
+  PYTHONPATH=src python -m benchmarks.run --suite pipeline --smoke \
+      [--out results/BENCH_pipeline.current.json]
 
 Default mode is quick (CI-sized); --full runs the complete sweeps.
 ``--suite nb`` runs the NB force-engine suite (dense vs sparse vs pallas
-pair schedules) and writes ``results/BENCH_nb.json``; ``--smoke`` is the
-CI-sized variant (single device, interpret mode).
+pair schedules) and writes ``results/BENCH_nb.json``; ``--suite
+pipeline`` runs the perf-trajectory suite (backend x pipeline mode x
+depth) and writes the schema-versioned ``BENCH_pipeline.json`` the CI
+``perf-smoke`` job drift-checks with ``python -m repro.obs gate``;
+``--smoke`` is the CI-sized variant, ``--out`` redirects the suite file
+(so a CI re-run never clobbers the checked-in baseline).
 """
 import argparse
 import sys
@@ -22,19 +28,24 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--suite", default=None, choices=("paper", "nb"),
+    ap.add_argument("--suite", default=None,
+                    choices=("paper", "nb", "pipeline"),
                     help="named suite: 'nb' = force-engine bench "
-                         "(BENCH_nb.json), 'paper' = all figures")
+                         "(BENCH_nb.json), 'pipeline' = perf-trajectory "
+                         "bench (BENCH_pipeline.json), 'paper' = all "
+                         "figures")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized nb suite (implies quick mode)")
+                    help="CI-sized suite variant (implies quick mode)")
+    ap.add_argument("--out", default=None,
+                    help="override the pipeline suite's output file")
     args = ap.parse_args()
 
-    if args.suite == "nb":
-        names = ["nb"]
+    if args.suite in ("nb", "pipeline"):
+        names = [args.suite]
     elif args.only:
         names = args.only.split(",")
     else:
-        names = [n for n in ALL if n != "nb"]
+        names = [n for n in ALL if n not in ("nb", "pipeline")]
     print("name,us_per_call,derived")
     for name in names:
         fn = ALL[name]
@@ -42,6 +53,8 @@ def main() -> None:
         try:
             if name == "nb":
                 fn(smoke=args.smoke or not args.full)
+            elif name == "pipeline":
+                fn(smoke=args.smoke or not args.full, out=args.out)
             elif name in ("fig3", "fig6", "lm"):
                 fn(quick=not args.full)
             else:

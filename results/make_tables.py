@@ -194,6 +194,51 @@ def nb_table():
           f"{r.get('per_pair_bounds_beat_global_kexec')}")
 
 
+def pipeline_table():
+    """Perf-trajectory suite (results/BENCH_pipeline.json): one row per
+    (backend x pipeline mode x depth) cell — the baseline the CI
+    ``perf-smoke`` job drift-checks with ``python -m repro.obs gate`` —
+    plus the obs snapshot counters from the traced sample run
+    (results/obs/pipeline_smoke.jsonl)."""
+    p = Path(__file__).parent / "BENCH_pipeline.json"
+    if not p.exists():
+        print("\n(no BENCH_pipeline.json — run `python -m benchmarks.run "
+              "--suite pipeline`)")
+        return
+    r = json.loads(p.read_text())
+    mode = "SMOKE (CI-sized baseline)" if r.get("smoke") else "full sweep"
+    print(f"\nsuite mode: {mode}; schema v{r.get('schema_version')}; "
+          f"exposed phases monotone in depth: "
+          f"{r.get('exposed_phases_monotone_in_depth')}")
+    print("\n| dev | backend | pipe | depth | nstprune | step ms | "
+          "force ms | exposed/step | ovl B | exch B | prune ratio | "
+          "modeled speedup |")
+    print("|" + "---|" * 12)
+    for c in r["cells"]:
+        pipe = c["pipeline"]
+        depth = c["pipeline_depth"] if pipe != "off" else "-"
+        print(f"| {c['devices']} | {c['mode']} | {pipe} | {depth} | "
+              f"{c['nstprune']} | {c['ms_per_step']:.2f} | "
+              f"{c['ms_force_pass']:.2f} | {c['exposed_phases']:g} | "
+              f"{c['overlapped_bytes']} | {c['exchanged_bytes']} | "
+              f"{c['prune_ratio']:.2f}x | {c['modeled_speedup']:.2f}x |")
+    jsonl = Path(__file__).parent / "obs" / "pipeline_smoke.jsonl"
+    if jsonl.exists():
+        snaps = [json.loads(ln) for ln in jsonl.read_text().splitlines()
+                 if ln.strip() and '"snapshot"' in ln]
+        snaps = [s for s in snaps if s.get("kind") == "snapshot"]
+        if snaps:
+            print("\nobs snapshot (traced sample run — counters/gauges at "
+                  "end of simulate):\n")
+            print("| metric | kind | value |")
+            print("|---|---|---|")
+            for name, m in sorted(snaps[-1]["metrics"].items()):
+                v = m["value"]
+                if isinstance(v, dict):       # histogram: show the mean
+                    v = f"mean {v.get('mean', 0):.4g} (n={v.get('count')})"
+                print(f"| {name} | {m['kind']} | {v} |")
+
+
 def force_table():
     """MD force-engine dry-run cells (mdforce__*.json): chosen backend +
     prune ratio / tier ladders as recorded by
@@ -237,6 +282,9 @@ if __name__ == "__main__":
         print("\n## NB force engine (pair schedules)")
         nb_table()
         force_table()
+    if which in ("all", "pipeline"):
+        print("\n## Perf trajectory (pipeline suite + obs metrics)")
+        pipeline_table()
     if which in ("all", "dryrun"):
         print("## Dry-run status")
         dryrun_table("single")

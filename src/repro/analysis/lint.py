@@ -34,6 +34,13 @@ RA007  scatter-mode                dynamic ``.at[idx].add/max/min`` without an
                                    explicit ``mode=`` — sentinel-row scatters
                                    rely on JAX's implicit out-of-bounds drop;
                                    state ``mode="drop"`` (the masked-add idiom)
+RA008  unsynced-timing-span        a ``time.time()``/``perf_counter()`` span
+                                   around a dispatched jax computation whose
+                                   stop-read (``time...() - t0``) has no
+                                   ``jax.block_until_ready`` in the window —
+                                   async dispatch means the clock measures
+                                   launch, not completion (use
+                                   ``repro.obs.span`` / ``repro.obs.time_fn``)
 ====== ==========================  =============================================
 
 Suppression: append ``# noqa`` (all rules) or ``# noqa: RA005, RA007``
@@ -79,6 +86,9 @@ RULES: Dict[str, Rule] = {r.code: r for r in (
          "collective over an undeclared mesh axis name"),
     Rule("RA007", "scatter-mode",
          "dynamic scatter-accumulate without explicit mode="),
+    Rule("RA008", "unsynced-timing-span",
+         "timing span over dispatched work stops the clock without "
+         "block_until_ready"),
 )}
 
 
@@ -107,6 +117,9 @@ _TRACE_TRANSFORMS = {"scan", "cond", "while_loop", "fori_loop", "switch",
 _COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "ppermute", "pshuffle",
                 "all_gather", "all_to_all", "psum_scatter", "axis_index"}
 _CTORS = {"zeros": 2, "ones": 2, "empty": 2, "full": 3}
+_TIME_READS = {"time", "perf_counter", "monotonic"}
+_JIT_BINDERS = {"jit", "shard_map", "shard_map_norep", "pallas_call"}
+_SYNCS = {"block_until_ready", "device_get"}
 
 
 def _qual(node: ast.AST) -> Optional[str]:
@@ -160,6 +173,8 @@ class _FileModel:
         self.np: Set[str] = set()
         self.lax: Set[str] = set()
         self.jax: Set[str] = set()
+        self.time_mods: Set[str] = set()
+        self.time_funcs: Set[str] = set()
         self.str_consts: Dict[str, Set[str]] = {}
         self.axis_literals: Set[str] = set()
         self._collect_imports_and_consts()
@@ -181,6 +196,8 @@ class _FileModel:
                         self.lax.add(a.asname or "lax")
                     elif a.name == "jax":
                         self.jax.add(name)
+                    elif a.name == "time":
+                        self.time_mods.add(name)
             elif isinstance(node, ast.ImportFrom):
                 mod = node.module or ""
                 for a in node.names:
@@ -189,6 +206,8 @@ class _FileModel:
                         self.jnp.add(name)
                     elif mod == "jax" and a.name == "lax":
                         self.lax.add(name)
+                    elif mod == "time" and a.name in _TIME_READS:
+                        self.time_funcs.add(name)
         for node in self.tree.body:
             if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                     and isinstance(node.targets[0], ast.Name):
@@ -527,6 +546,110 @@ def _check_scatter_modes(model: _FileModel, out: List[Diagnostic]) -> None:
             "idiom) to make the contract explicit"))
 
 
+def _is_time_read(model: _FileModel, call: ast.Call) -> bool:
+    fq = _qual(call.func)
+    if not fq:
+        return False
+    parts = fq.split(".")
+    if len(parts) == 1:
+        return parts[0] in model.time_funcs
+    return parts[0] in model.time_mods and parts[-1] in _TIME_READS
+
+
+def _jit_bound_names(model: _FileModel) -> Set[str]:
+    """Names (incl. attribute targets like self.step_c) bound to the
+    result of a jit/shard_map/pallas_call — calling one dispatches."""
+    names: Set[str] = set()
+    for node in ast.walk(model.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fq = _qual(node.value.func) or ""
+            if fq.split(".")[-1] in _JIT_BINDERS:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+                    elif isinstance(t, ast.Attribute):
+                        names.add(t.attr)
+    return names
+
+
+def _is_dispatch(model: _FileModel, call: ast.Call,
+                 jit_names: Set[str]) -> bool:
+    fq = _qual(call.func)
+    if model.is_jnp(fq) or model.is_laxish(fq):
+        return True
+    last = fq.split(".")[-1] if fq else ""
+    return last.endswith("_fn") or last == "simulate" or last in jit_names
+
+
+def _scope_nodes(scope: ast.AST) -> List[ast.AST]:
+    """Descendants of ``scope``, not descending into nested functions."""
+    out: List[ast.AST] = []
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        n = stack.pop()
+        out.append(n)
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+    return out
+
+
+def _check_timing_spans(model: _FileModel, out: List[Diagnostic]) -> None:
+    """RA008: ``t0 = time...()`` ... dispatch ... ``time...() - t0`` with no
+    ``block_until_ready``/``device_get`` inside the span — jax dispatch is
+    async, so the stop-read clocks the *launch*, not the computation.
+
+    Host-side rule (no traced-context gate); matched per lexical scope so
+    a start in one function never pairs with a stop-read in another.
+    Attribute-target starts (``sp.t0 = perf_counter()``) are deliberately
+    not matched: that is the obs span machinery itself."""
+    jit_names = _jit_bound_names(model)
+    scopes: List[ast.AST] = [model.tree]
+    scopes += [fn for defs in model.funcs.values() for fn in defs]
+    for scope in scopes:
+        nodes = _scope_nodes(scope)
+        starts: Dict[str, List[int]] = {}
+        for n in nodes:
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                    and isinstance(n.targets[0], ast.Name) \
+                    and isinstance(n.value, ast.Call) \
+                    and _is_time_read(model, n.value):
+                starts.setdefault(n.targets[0].id, []).append(n.lineno)
+        if not starts:
+            continue
+        calls = [n for n in nodes if isinstance(n, ast.Call)]
+        for n in nodes:
+            if not (isinstance(n, ast.BinOp) and isinstance(n.op, ast.Sub)
+                    and isinstance(n.right, ast.Name)
+                    and n.right.id in starts
+                    and isinstance(n.left, ast.Call)
+                    and _is_time_read(model, n.left)):
+                continue
+            opened = [ln for ln in starts[n.right.id] if ln <= n.lineno]
+            if not opened:
+                continue
+            t_start = max(opened)
+            window = [c for c in calls if t_start <= c.lineno <= n.lineno]
+            dispatched = any(_is_dispatch(model, c, jit_names)
+                             for c in window)
+            # method-style syncs (`y.block_until_ready()`) have a non-Name
+            # chain root, so check the attribute directly too
+            synced = any(
+                (isinstance(c.func, ast.Attribute)
+                 and c.func.attr in _SYNCS)
+                or (_qual(c.func) or "").split(".")[-1] in _SYNCS
+                for c in window)
+            if dispatched and not synced:
+                out.append(Diagnostic(
+                    model.path, n.lineno, n.col_offset, "RA008",
+                    f"timing span `{n.right.id}` covers a dispatched jax "
+                    "computation but stops the clock without "
+                    "`jax.block_until_ready`; async dispatch means this "
+                    "measures the launch, not the work — sync the result "
+                    "before the read (or use `repro.obs.span` / "
+                    "`repro.obs.time_fn`)"))
+
+
 # --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
@@ -583,6 +706,7 @@ def lint_models(models: Sequence[_FileModel]) -> List[Diagnostic]:
         _check_pair_reductions(model, out)
         _check_collective_axes(model, declared, project_consts, out)
         _check_scatter_modes(model, out)
+        _check_timing_spans(model, out)
         seen = set()
         for d in out:
             key = (d.line, d.col, d.code)

@@ -591,6 +591,22 @@ class HaloPlan:
             self._stats_cache[key] = stats
         return self._stats_cache[key]
 
+    def publish_stats(self, registry, local_shape: Sequence[int],
+                      **kw) -> dict:
+        """:meth:`stats`, also published as a ``halo_stats`` record.
+
+        The registry stays out of the stats cache key: this is a separate
+        method so ``stats`` callers keep their memoization while emitters
+        (engine build, benchmarks) push the same dict — plus the backend's
+        critical-path model, which the Perfetto exporter's predicted lanes
+        key on — into a :class:`~repro.obs.registry.MetricsRegistry`.
+        """
+        stats = self.stats(local_shape, **kw)
+        registry.emit("halo_stats", backend=self.spec.backend,
+                      critical_path=self.backend.critical_path,
+                      local_shape=tuple(local_shape), data=stats)
+        return stats
+
     # -- device-local execution (inside an enclosing shard_map) ------------
 
     def _resolve_shift(self, wrap_shift):

@@ -65,6 +65,8 @@ from repro.core.md.schedule_opt import bucket, tier_cum, tier_plan, tier_rows
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
 from repro.core.pipeline import PIPELINE_MODES, StepFns, StepPipeline
+from repro.obs import PhaseTracer, default_registry
+from repro.obs import span as obs_span
 
 
 class MDEngine:
@@ -122,7 +124,8 @@ class MDEngine:
                  inner_radius: float | None = None,
                  inner_safety: float = 1.5,
                  pair_bucket: int = PAIR_BUCKET,
-                 verify: str = "error"):
+                 verify: str = "error",
+                 obs=None, trace: bool = False):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -244,6 +247,21 @@ class MDEngine:
             n_pulses=max(1, self.plan.sched.total_pulses), verify=verify,
             inner_safety=self.inner_safety, r_list_factor=r_list_factor,
             mig_frac=mig_frac, capacity_safety=capacity_safety)
+        # observability: every stats surface also publishes structured
+        # records/instruments here; ``trace=True`` additionally threads
+        # per-step ``obs/*`` ledger counters through the block programs
+        # (barrier-neutral — trajectories stay bitwise-identical).
+        self.obs = obs if obs is not None else default_registry()
+        self.tracer = PhaseTracer(enabled=bool(trace))
+        self.obs.emit(
+            "engine_build", backend=self.backend,
+            pipeline=self.pipeline_mode, pipeline_depth=self.pipeline_depth,
+            overlap_rebin=self.overlap_rebin,
+            force_backend=self.force_backend, nstprune=self.nstprune,
+            n_atoms=system.n_atoms, global_cells=self.layout.global_cells,
+            capacity=self.layout.capacity,
+            schedule_safe=(None if self.schedule_report is None
+                           else self.schedule_report.safe))
         self._build_programs()
 
     @property
@@ -266,9 +284,12 @@ class MDEngine:
         K = self.layout.capacity
         gz, gy, gx = self.layout.global_cells
         occupancy = self.system.n_atoms / float(gz * gy * gx * K)
-        return self.plan.stats(self.layout.cells_per_domain,
-                               index_elems=2 * K, index_itemsize=4,
-                               occupancy=occupancy)
+        return self.plan.publish_stats(self.obs,
+                                       self.layout.cells_per_domain,
+                                       index_elems=2 * K, index_itemsize=4,
+                                       occupancy=occupancy,
+                                       pipeline=self.pipeline_mode,
+                                       depth=self.pipeline_depth)
 
     def pair_stats(self) -> dict:
         """Evaluated-slot-pair accounting of the latest pruned block.
@@ -286,13 +307,17 @@ class MDEngine:
         if self.force_backend == "pallas":
             from repro.core.md.pair_schedule import pallas_fallback_active
             out["pallas_fallback"] = pallas_fallback_active()
+        self.obs.emit("pair_stats", data=out)
+        self.obs.gauge("md/prune_ratio").set(out.get("prune_ratio", 1.0))
         return out
 
     def overlap_stats(self) -> dict:
         """Per-step overlap model at this engine's pipeline mode/depth."""
-        return self.plan.stats(self.layout.cells_per_domain,
-                               pipeline=self.pipeline_mode,
-                               depth=self.pipeline_depth)["overlap"]
+        overlap = self.plan.stats(self.layout.cells_per_domain,
+                                  pipeline=self.pipeline_mode,
+                                  depth=self.pipeline_depth)["overlap"]
+        self.obs.emit("overlap_model", backend=self.backend, data=overlap)
+        return overlap
 
     def _trim_ext(self, ext):
         """First halo cell layer of an extended block (the NB stencil
@@ -417,7 +442,9 @@ class MDEngine:
         self.pipeline = StepPipeline.build(self.plan, self._make_step_fns(),
                                            mode=self.pipeline_mode,
                                            depth=self.pipeline_depth,
-                                           verify="off")
+                                           verify="off",
+                                           tracer=self.tracer)
+        sc = self.tracer.scope
 
         def block(cell_f, cell_i, force, n_steps):
             ctx = self._block_ctx(cell_i)
@@ -461,10 +488,11 @@ class MDEngine:
                 # the outer-ladder fallback remain valid on it, and the
                 # cost is one exchange + sort per nstlist block, off
                 # the per-step path
-                ext_f = self.plan.fwd_local(cell_f[..., :4])
-                sel_exec, cum_s = roll_prune(
-                    self.pair_schedule, sel_exec, self._trim_ext(ext_f),
-                    ctx["ext_i_trim"], self.r_inner)
+                with sc("roll_prune"):
+                    ext_f = self.plan.fwd_local(cell_f[..., :4])
+                    sel_exec, cum_s = roll_prune(
+                        self.pair_schedule, sel_exec, self._trim_ext(ext_f),
+                        ctx["ext_i_trim"], self.r_inner)
                 overflow = jnp.maximum(
                     overflow, jnp.max(jnp.maximum(cum_s - budget, 0)))
                 ctx_s = dict(ctx)
@@ -509,7 +537,8 @@ class MDEngine:
             cell_f, cell_i, _f_last, metrics = block(cell_f, cell_i, force,
                                                      n_steps)
             cell_f, cell_i = lax.optimization_barrier((cell_f, cell_i))
-            new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
+            with sc("rebin_seam"):
+                new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
             return new_f, new_i, force, metrics, diag
 
         def block_sched_rebin(cell_f, cell_i, force, sel, n_steps, tiers,
@@ -517,8 +546,9 @@ class MDEngine:
             cell_f, cell_i, _f_last, metrics, ovf = block_sched(
                 cell_f, cell_i, force, sel, n_steps, tiers, tiers_inner)
             cell_f, cell_i = lax.optimization_barrier((cell_f, cell_i))
-            new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
-            sel2, cum, cum_inner, occ = do_prune(new_f, new_i)
+            with sc("rebin_seam"):
+                new_f, new_i, force, diag = do_rebin(cell_f, cell_i)
+                sel2, cum, cum_inner, occ = do_prune(new_f, new_i)
             return (new_f, new_i, force, metrics, diag, sel2, cum,
                     cum_inner, occ, ovf)
 
@@ -677,9 +707,15 @@ class MDEngine:
             "inner_overflow_blocks": self._inner_overflows,
             "inner_disabled": bool(self.nstprune and disable_inner),
         })
-        self.sched_history.append(
-            (tier_rows(tiers),
-             tier_rows(tiers_inner) if tiers_inner else tier_rows(tiers)))
+        outer_rows = tier_rows(tiers)
+        inner_rows = tier_rows(tiers_inner) if tiers_inner else outer_rows
+        self.sched_history.append((outer_rows, inner_rows))
+        self.obs.gauge("md/outer_rows").set(outer_rows)
+        self.obs.gauge("md/inner_rows").set(inner_rows)
+        self.obs.emit("sched_update", block=len(self.sched_history),
+                      outer_rows=outer_rows, inner_rows=inner_rows,
+                      max_occupancy=occ,
+                      inner_disabled=bool(self.nstprune and disable_inner))
         self._sched_exec = (sel, tiers, tiers_inner)
         return self._sched_exec
 
@@ -689,6 +725,7 @@ class MDEngine:
         if not self.nstprune or int(jax.device_get(ovf)) == 0:
             return False
         self._inner_overflows += 1
+        self.obs.counter("md/inner_overflow_blocks").inc()
         if self._inner_overflows == 1:
             warnings.warn(
                 "rolling inner prune overflowed its tier ladder (more "
@@ -714,53 +751,73 @@ class MDEngine:
             cell_f, cell_i = self.init_state()
         else:
             cell_f, cell_i = state
-        cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
-        sched = self._refresh_schedule(cell_f, cell_i)
+        blocks_c = self.obs.counter("md/blocks")
+        steps_c = self.obs.counter("md/steps")
+        with obs_span("rebin_dispatch", self.obs):
+            cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
+            sched = self._refresh_schedule(cell_f, cell_i)
         all_metrics = []
         diags = [jax.device_get(diag)]
         done = 0
         while done < n_steps:
             take = min(nst, n_steps - done)
             fuse = self.overlap_rebin and done + take < n_steps
-            if fuse and sched is None:
-                cell_f, cell_i, force, m, diag = self.block_rebin_fn(
-                    cell_f, cell_i, force, take)
-            elif fuse:
-                sel, tiers, tiers_inner = sched
-                (cell_f, cell_i, force, m, diag, sel2, cum, cum_inner,
-                 occ, ovf) = \
-                    self.block_sched_rebin_fn(cell_f, cell_i, force, sel,
-                                              take, tiers, tiers_inner)
-                sched = self._bucket_exec(
-                    sel2, cum, cum_inner, occ,
-                    disable_inner=self._note_overflow(ovf))
-            elif sched is None:
-                cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
-                                                         force, take)
-            else:
-                sel, tiers, tiers_inner = sched
-                cell_f, cell_i, force, m, ovf = self.block_sched_fn(
-                    cell_f, cell_i, force, sel, take, tiers, tiers_inner)
-                # read the block's overflow scalar NOW (not at the next
-                # boundary) so a final block's overflow is still counted
-                # and warned — the monitor contract has no blind spot
-                disable = self._note_overflow(ovf)
+            with obs_span("block_dispatch", self.obs, steps=take,
+                          fused_rebin=fuse):
+                if fuse and sched is None:
+                    cell_f, cell_i, force, m, diag = self.block_rebin_fn(
+                        cell_f, cell_i, force, take)
+                elif fuse:
+                    sel, tiers, tiers_inner = sched
+                    (cell_f, cell_i, force, m, diag, sel2, cum, cum_inner,
+                     occ, ovf) = \
+                        self.block_sched_rebin_fn(cell_f, cell_i, force,
+                                                  sel, take, tiers,
+                                                  tiers_inner)
+                    sched = self._bucket_exec(
+                        sel2, cum, cum_inner, occ,
+                        disable_inner=self._note_overflow(ovf))
+                elif sched is None:
+                    cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
+                                                             force, take)
+                else:
+                    sel, tiers, tiers_inner = sched
+                    cell_f, cell_i, force, m, ovf = self.block_sched_fn(
+                        cell_f, cell_i, force, sel, take, tiers,
+                        tiers_inner)
+                    # read the block's overflow scalar NOW (not at the next
+                    # boundary) so a final block's overflow is still
+                    # counted and warned — the monitor has no blind spot
+                    disable = self._note_overflow(ovf)
+            blocks_c.inc()
+            steps_c.inc(take)
             if collect:
                 all_metrics.append(jax.device_get(m))
             done += take
             if fuse:
                 diags.append(jax.device_get(diag))
             elif done < n_steps:
-                cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
-                sched = self._refresh_schedule(
-                    cell_f, cell_i,
-                    disable_inner=sched is not None and disable)
+                with obs_span("rebin_dispatch", self.obs):
+                    cell_f, cell_i, force, diag = self.rebin_fn(cell_f,
+                                                                cell_i)
+                    sched = self._refresh_schedule(
+                        cell_f, cell_i,
+                        disable_inner=sched is not None and disable)
                 diags.append(jax.device_get(diag))
         metrics = {}
         if collect and all_metrics:
             metrics = {k: np.concatenate([np.atleast_1d(m[k])
                                           for m in all_metrics])
                        for k in all_metrics[0]}
+            obs_keys = [k for k in metrics if k.startswith("obs/")]
+            if obs_keys:
+                # the traced per-step ledger counters, as one record the
+                # Perfetto exporter turns into predicted-lane counters
+                self.obs.emit("step_counters",
+                              data={k: metrics[k] for k in obs_keys})
+        self.obs.snapshot(label="md/simulate", n_steps=n_steps,
+                          backend=self.backend,
+                          pipeline=self.pipeline_mode)
         return (cell_f, cell_i), metrics, diags
 
     def gather_by_id(self, arrays, cell_i):

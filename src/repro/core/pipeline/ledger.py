@@ -123,8 +123,14 @@ class SignalLedger:
         at most ``depth - 1`` steps in flight."""
         return jnp.all(st.clobbers == 0)
 
-    def summary(self, st: LedgerState) -> dict:
-        """Host-side totals per kind (call outside jit on a final state)."""
+    def summary(self, st: LedgerState, registry=None,
+                prefix: str = "ledger") -> dict:
+        """Host-side totals per kind (call outside jit on a final state).
+
+        With a :class:`~repro.obs.registry.MetricsRegistry`, also
+        publishes the totals as a ``ledger_summary`` record plus
+        ``<prefix>/*`` gauges (the structured-emitter view of the same
+        numbers)."""
         out = {}
         for k, kind in enumerate(KINDS):
             lo = k * self.depth * self.n_pulses
@@ -137,4 +143,14 @@ class SignalLedger:
         out["in_flight"] = int(self.in_flight(st))
         out["clobbers"] = int(st.clobbers.sum())
         out["window_safe"] = bool(self.window_safe(st))
+        if registry is not None:
+            registry.emit("ledger_summary", depth=self.depth,
+                          n_pulses=self.n_pulses, data=out)
+            for kind in KINDS:
+                registry.gauge(f"{prefix}/{kind}_released").set(
+                    out[kind]["released"])
+                registry.gauge(f"{prefix}/{kind}_acquired").set(
+                    out[kind]["acquired"])
+            registry.gauge(f"{prefix}/in_flight").set(out["in_flight"])
+            registry.gauge(f"{prefix}/clobbers").set(out["clobbers"])
         return out

@@ -50,6 +50,7 @@ from jax import lax
 
 from repro.core.halo_plan import HaloPlan
 from repro.core.pipeline.ledger import LedgerState, SignalLedger
+from repro.obs.tracing import NULL_TRACER, PhaseTracer
 
 PIPELINE_MODES = ("off", "double_buffer")
 
@@ -98,7 +99,7 @@ class StepPipeline:
 
     def __init__(self, plan: HaloPlan, fns: StepFns,
                  mode: str = "double_buffer", depth: int = 2,
-                 verify: str = "error"):
+                 verify: str = "error", tracer: PhaseTracer = None):
         if mode not in PIPELINE_MODES:
             raise ValueError(f"unknown pipeline mode {mode!r}; "
                              f"available: {PIPELINE_MODES}")
@@ -107,6 +108,12 @@ class StepPipeline:
         self.plan = plan
         self.fns = fns
         self.mode = mode
+        # phase tracing: named scopes are always on (pure metadata); an
+        # enabled tracer additionally emits per-step ``obs/*`` ledger
+        # counters into the metrics dict.  Both are barrier-neutral —
+        # trajectories stay bitwise-identical with tracing on (the obs
+        # outputs are functions of counters the scan carry already holds).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.depth = int(depth) if mode == "double_buffer" else 1
         self.ledger = SignalLedger(depth=self.depth,
                                    n_pulses=max(1, plan.sched.total_pulses))
@@ -123,8 +130,10 @@ class StepPipeline:
     @classmethod
     def build(cls, plan: HaloPlan, fns: StepFns, *,
               mode: str = "double_buffer", depth: int = 2,
-              verify: str = "error") -> "StepPipeline":
-        return cls(plan, fns, mode=mode, depth=depth, verify=verify)
+              verify: str = "error",
+              tracer: PhaseTracer = None) -> "StepPipeline":
+        return cls(plan, fns, mode=mode, depth=depth, verify=verify,
+                   tracer=tracer)
 
     # -- execution (device-local: call inside the engine's shard_map) ------
 
@@ -148,33 +157,48 @@ class StepPipeline:
         be fused or hoisted across either side of the exchange and the
         physics islands compile identically for every backend.
         """
-        payload = lax.optimization_barrier(payload)
-        return lax.optimization_barrier(self.plan.fwd_local(payload))
+        sc = self.tracer.scope
+        with sc("fwd_release"):
+            payload = lax.optimization_barrier(payload)
+        with sc("pack_send"):
+            ext = self.plan.fwd_local(payload)
+        with sc("fwd_acquire"):
+            return lax.optimization_barrier(ext)
 
     def _rev(self, F_ext):
         """Force-return exchange between its signal release and acquire."""
-        F_ext = lax.optimization_barrier(F_ext)
-        return lax.optimization_barrier(self.plan.rev_local(F_ext))
+        sc = self.tracer.scope
+        with sc("rev_release"):
+            F_ext = lax.optimization_barrier(F_ext)
+        with sc("rev_return"):
+            f = self.plan.rev_local(F_ext)
+        with sc("rev_acquire"):
+            return lax.optimization_barrier(f)
 
     def _run_serial(self, state, f0, n_steps, ctx):
-        fns, ledger = self.fns, self.ledger
+        fns, ledger, sc = self.fns, self.ledger, self.tracer.scope
 
         def step(carry, _):
             state, f, led = carry
-            state, aux, payload = fns.begin(state, f, ctx)
+            with sc("integrate_begin"):
+                state, aux, payload = fns.begin(state, f, ctx)
             led = ledger.release(led, "fwd", 0)
             ext = self._fwd(payload)
             led = ledger.acquire(led, "fwd", 0)
-            F_ext, m_force = fns.force(ext, ctx)
+            with sc("force"):
+                F_ext, m_force = fns.force(ext, ctx)
             led = ledger.release(led, "rev", 0)
             f_new = self._rev(F_ext)
             led = ledger.acquire(led, "rev", 0)
-            state, f_new, m_fin = fns.finish(state, aux, f_new, ctx)
+            with sc("integrate_finish"):
+                state, f_new, m_fin = fns.finish(state, aux, f_new, ctx)
             # pin the step boundary (the per-step signal rotation): the
             # carried state is materialized identically in every schedule,
             # keeping trajectories bitwise-stable across pipeline modes
             state, f_new = lax.optimization_barrier((state, f_new))
-            return (state, f_new, led), {**m_force, **m_fin}
+            m = {**m_force, **m_fin,
+                 **self.tracer.step_metrics(ledger, led)}
+            return (state, f_new, led), m
 
         (state, f, led), metrics = lax.scan(
             step, (state, f0, ledger.init()), None, length=n_steps)
@@ -195,21 +219,26 @@ class StepPipeline:
         ``depth - 2`` units of the unrolled window.
         """
         fns, ledger, depth = self.fns, self.ledger, self.depth
+        sc = self.tracer.scope
         state, slots, aux, led = carry
         prev, cur = (k - 1) % depth, k % depth
         F_prev = lax.dynamic_index_in_dim(slots, prev, 0, keepdims=False)
         f_prev = self._rev(F_prev)
         led = ledger.acquire(led, "rev", prev)
-        state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
-        state, aux, payload = fns.begin(state, f_carry, ctx)
+        with sc("integrate_finish"):
+            state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
+        with sc("integrate_begin"):
+            state, aux, payload = fns.begin(state, f_carry, ctx)
         led = ledger.release(led, "fwd", cur)
         ext = self._fwd(payload)
         led = ledger.acquire(led, "fwd", cur)
-        F_ext, m_force = fns.force(ext, ctx)
+        with sc("force"):
+            F_ext, m_force = fns.force(ext, ctx)
         slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
         led = ledger.release(led, "rev", cur)
         # pin the step boundary (see _run_serial)
         state, slots = lax.optimization_barrier((state, slots))
+        m_fin = {**m_fin, **self.tracer.step_metrics(ledger, led)}
         return (state, slots, aux, led), m_force, m_fin
 
     def _run_pipelined(self, state, f0, n_steps, ctx):
@@ -271,7 +300,10 @@ class StepPipeline:
         F_last = lax.dynamic_index_in_dim(slots, last, 0, keepdims=False)
         f_last = self._rev(F_last)
         led = ledger.acquire(led, "rev", last)
-        state, f_carry, m_fin_last = fns.finish(state, aux, f_last, ctx)
+        with self.tracer.scope("integrate_finish"):
+            state, f_carry, m_fin_last = fns.finish(state, aux, f_last, ctx)
+        m_fin_last = {**m_fin_last,
+                      **self.tracer.step_metrics(ledger, led)}
         m_fin_chunks.append(_stack1(m_fin_last))
 
         # re-align per-step metrics: the prologue/windows emitted step k's

@@ -24,7 +24,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -32,6 +31,8 @@ import jax
 import numpy as np
 
 from repro import compat
+from repro.obs import default_registry
+from repro.obs import span as obs_span
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
@@ -97,21 +98,24 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None,
              tag: str = "", verbose: bool = True):
     mesh_name = "multi" if multi_pod else "single"
-    t0 = time.time()
+    reg = default_registry()
+    sp_cell = None
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
               "tag": tag, "ok": False}
     try:
+      with obs_span("dryrun/cell", reg, arch=arch, shape=shape_name,
+                    mesh=mesh_name) as sp_cell:
         cfg = get_config(arch)
         shape = SHAPES[shape_name]
         ok, why = shape_applicable(cfg, shape)
         if not ok:
             record.update({"skipped": why, "ok": True})
             return record
-        lowered, cfg, shape, ctx, extra = lower_cell(
-            arch, shape_name, multi_pod, overrides, tag)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        with obs_span("dryrun/lower", reg) as sp_lower:
+            lowered, cfg, shape, ctx, extra = lower_cell(
+                arch, shape_name, multi_pod, overrides, tag)
+        with obs_span("dryrun/compile", reg) as sp_compile:
+            compiled = lowered.compile()
 
         mem = compiled.memory_analysis()
         mem_d = {k: int(getattr(mem, k)) for k in (
@@ -159,8 +163,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None,
 
         record.update({
             "ok": True,
-            "lower_s": round(t_lower, 1),
-            "compile_s": round(t_compile, 1),
+            "lower_s": round(sp_lower.dur, 1),
+            "compile_s": round(sp_compile.dur, 1),
             "memory": mem_d,
             "device_total_bytes": mem_d["argument_size_in_bytes"] +
             mem_d["output_size_in_bytes"] + mem_d["temp_size_in_bytes"] -
@@ -186,7 +190,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None,
         if verbose:
             print(record["traceback"])
     finally:
-        record["wall_s"] = round(time.time() - t0, 1)
+        if sp_cell is not None and sp_cell.dur is not None:
+            record["wall_s"] = round(sp_cell.dur, 1)
         jax.clear_caches()
     return record
 
@@ -232,11 +237,13 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
     from repro.core.halo_plan import HaloPlan, HaloSpec
     from repro.launch.mesh import make_mesh
 
-    t0 = time.time()
+    sp_cell = None
     record = {"kind": "halo", "dd": dd_name, "backend": backend,
               "local": list(local), "width": width, "pulses": pulses,
               "pipeline": pipeline, "pipeline_depth": depth, "ok": False}
     try:
+      with obs_span("dryrun/halo_cell", default_registry(), dd=dd_name,
+                    backend=backend) as sp_cell:
         dd = HALO_DD[dd_name]
         mesh = make_mesh(dd, ("z", "y", "x"))
         # width 0 on non-decomposed dims: a 1D DD exchanges z-slabs only
@@ -274,7 +281,8 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
         if verbose:
             print(record["traceback"])
     finally:
-        record["wall_s"] = round(time.time() - t0, 1)
+        if sp_cell is not None and sp_cell.dur is not None:
+            record["wall_s"] = round(sp_cell.dur, 1)
         jax.clear_caches()
     return record
 
@@ -316,13 +324,16 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
     from repro.core.md import MDEngine, make_grappa_like
     from repro.launch.mesh import make_mesh
 
-    t0 = time.time()
+    sp_cell = None
     dd_name = f"{sum(1 for d in dd if d > 1)}d"
     record = {"kind": "mdforce", "dd": dd_name, "backend": halo_backend,
               "force_backend": force_backend, "pipeline": pipeline,
               "pipeline_depth": depth, "overlap_rebin": overlap_rebin,
               "nstprune": nstprune, "n_atoms": n_atoms, "ok": False}
     try:
+      with obs_span("dryrun/md_cell", default_registry(), dd=dd_name,
+                    backend=halo_backend,
+                    force_backend=force_backend) as sp_cell:
         mesh = make_mesh(dd, ("z", "y", "x"))
         system = make_grappa_like(n_atoms, seed=1)
         spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
@@ -355,7 +366,8 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
         if verbose:
             print(record["traceback"])
     finally:
-        record["wall_s"] = round(time.time() - t0, 1)
+        if sp_cell is not None and sp_cell.dur is not None:
+            record["wall_s"] = round(sp_cell.dur, 1)
         jax.clear_caches()
     return record
 

@@ -59,6 +59,9 @@ class BatchServer:
             logits, cache = self._decode(self.params, tok,
                                          jnp.int32(pos), cache)
             tok = self._sample(logits)
+        # the final sampled token is still in flight (outs[] reads synced
+        # every earlier iteration) — block so dt covers the whole wave
+        jax.block_until_ready(tok)
         dt = time.time() - t0
         for i, r in enumerate(requests):
             r.out_tokens = outs[i, : r.max_new_tokens]

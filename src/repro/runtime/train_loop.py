@@ -104,6 +104,9 @@ def run_training(loop_cfg: TrainLoopConfig, program, data_cfg: DataConfig,
             params, opt_state, metrics = program.step_fn(params, opt_state,
                                                          batch)
             loss = float(metrics["loss" if "loss" in metrics else "ce"])
+            # the loss read above syncs metrics only; the updated params /
+            # opt state are still in flight — block so dt clocks the step
+            jax.block_until_ready((params, opt_state))
             dt = time.time() - t0
             watchdog.observe(step, dt)
             history.append({"step": step, "loss": loss, "dt": dt})

@@ -1,0 +1,18 @@
+"""RA008 fixture: timing spans that stop the clock on async dispatch."""
+import time
+from time import perf_counter
+
+import jax
+
+
+def time_simulate(eng, steps):
+    t0 = perf_counter()
+    state, metrics, diags = eng.simulate(steps)
+    return state, perf_counter() - t0       # RA008: clocks the launch
+
+def time_jitted(fn, x):
+    step = jax.jit(fn)
+    t0 = time.time()
+    y = step(x)
+    dt = time.time() - t0                   # RA008: same hazard
+    return y, dt

@@ -1,0 +1,23 @@
+"""RA008 fixture (clean): synced spans and host-only timing."""
+import time
+from time import perf_counter
+
+import jax
+
+
+def time_simulate_synced(eng, steps):
+    t0 = perf_counter()
+    state, metrics, diags = eng.simulate(steps)
+    jax.block_until_ready(state)            # the clock covers the work
+    return state, perf_counter() - t0
+
+def time_jitted_synced(fn, x):
+    step = jax.jit(fn)
+    t0 = time.time()
+    y = step(x).block_until_ready()
+    return y, time.time() - t0
+
+def time_host_only(rows):
+    t0 = time.time()
+    total = sum(len(r) for r in rows)       # pure host work: no sync needed
+    return total, time.time() - t0
