@@ -388,6 +388,166 @@ def pipeline_bench(smoke: bool = False, out: str = None):
     emit("pipeline/cells", 0.0, str(len(cells)))
 
 
+def resilience_bench(smoke: bool = False, out: str = None):
+    """Fault-recovery suite: fault site x recovery mode cells ->
+    schema-versioned ``results/BENCH_resilience.json``.
+
+    Every :data:`~repro.resilience.faults.ALL_FAULT_SITES` entry is
+    provoked through :class:`~repro.resilience.runner.ResilientMDRunner`
+    on a single-device mesh and the recovery contract is recorded per
+    cell: detection latency (steps from injection to health trip),
+    rollback cost (re-simulated steps), the action the policy landed on,
+    and whether the repaired trajectory is bitwise equal to the
+    fault-free reference.  Cells are keyed on ``(site, mode)`` — the
+    ``gate`` section carries its own ``key_fields`` so ``python -m
+    repro.obs gate`` indexes them correctly — and the contract columns
+    are gated *exact*: a latency or rollback-cost drift is a semantic
+    change to the recovery path, not noise.  ``degraded_step_ratio``
+    (degraded-mode step time over healthy step time) rides the
+    timing-factor envelope like every other wall-clock key.
+    """
+    import tempfile
+    import time as _time
+
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+    from repro.obs import SCHEMA_VERSION
+    from repro.resilience import (FaultPlan, FaultSpec, ProcessKilled,
+                                  RecoveryPolicy, ResilientMDRunner)
+
+    n_steps, nstlist = 18, 6
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    system = make_grappa_like(300, seed=11, nstlist=nstlist)
+    tmp = Path(tempfile.mkdtemp(prefix="bench_resilience_"))
+
+    ref_eng = MDEngine(system, mesh)
+    (cf_r, ci_r), _, _ = ref_eng.simulate(n_steps)
+    ref_cf, ref_ci = np.asarray(cf_r), np.asarray(ci_r)
+
+    eng = MDEngine(system, mesh, inject=True, health=True)
+
+    def timed_run(runner):
+        t0 = _time.perf_counter()
+        res = runner.run(n_steps, resume=False)
+        return res, (_time.perf_counter() - t0) * 1e3 / n_steps
+
+    # healthy (disarmed) run: the step-time denominator + bitwise anchor
+    r0 = ResilientMDRunner(eng, tmp / "ck_healthy")
+    ((cf0, ci0), _, rep0), healthy_ms = timed_run(r0)
+    bitwise0 = bool(np.array_equal(np.asarray(cf0), ref_cf)
+                    and np.array_equal(np.asarray(ci0), ref_ci))
+
+    cells = [{"site": "none", "mode": "healthy",
+              "detection_latency_steps": 0, "wasted_steps": 0,
+              "n_recoveries": 0, "final_action": "none",
+              "bitwise": bitwise0, "resharded": False,
+              "ms_per_step": healthy_ms, "degraded_step_ratio": 1.0}]
+
+    def add_cell(site, mode, report, ms, bitwise, action, latency=0,
+                 **extra):
+        cell = {"site": site, "mode": mode,
+                "detection_latency_steps": int(latency),
+                "wasted_steps": int(report["wasted_steps"]),
+                "n_recoveries": len(report["recoveries"]),
+                "final_action": action, "bitwise": bool(bitwise),
+                "resharded": bool(report["resharded"]),
+                "ms_per_step": ms,
+                "degraded_step_ratio": ms / max(healthy_ms, 1e-9), **extra}
+        cells.append(cell)
+        emit(f"resilience/{site}/{mode}", ms * 1e3,
+             f"latency={cell['detection_latency_steps']};"
+             f"wasted={cell['wasted_steps']};action={action};"
+             f"bitwise={cell['bitwise']}")
+
+    def bitwise_vs_ref(cf, ci):
+        return bool(np.array_equal(np.asarray(cf), ref_cf)
+                    and np.array_equal(np.asarray(ci), ref_ci))
+
+    # one-shot scan faults -> rollback, bitwise repair
+    for site, step in (("halo_corrupt", 8), ("force_nan", 13),
+                       ("signal_drop", 2)):
+        r = ResilientMDRunner(eng, tmp / f"ck_{site}",
+                              plan=FaultPlan([FaultSpec(site, step)]))
+        ((cf, ci), _, rep), ms = timed_run(r)
+        rec = rep["recoveries"][0]
+        add_cell(site, "recover", rep, ms, bitwise_vs_ref(cf, ci),
+                 rec["action"], rec["detection_latency_steps"])
+
+    # sticky faults -> degrade ladder (serialized halo / dense forces)
+    for site, rung in (("signal_drop", "serialized_halo"),
+                       ("force_nan", "dense_forces")):
+        e = MDEngine(system, mesh, inject=True, health=True)
+        r = ResilientMDRunner(
+            e, tmp / f"ck_{site}_sticky",
+            plan=FaultPlan([FaultSpec(site, 2, sticky=True)]),
+            policy=RecoveryPolicy(max_retries=1, backoff_base_s=0.0))
+        ((cf, ci), _, rep), ms = timed_run(r)
+        add_cell(site, "degrade", rep, ms, bitwise_vs_ref(cf, ci),
+                 "degrade", rep["recoveries"][0]["detection_latency_steps"],
+                 rung=rep["recoveries"][-1]["detail"])
+
+    # forced inner-ladder overflow -> the engine's own outer fallback
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore")
+        e_ovf = MDEngine(system, mesh, inject=True, health=True,
+                         force_backend="sparse", nstprune=3)
+    r = ResilientMDRunner(e_ovf, tmp / "ck_ovf",
+                          plan=FaultPlan([FaultSpec("inner_overflow", 6)]))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore")
+        ((cf, ci), _, rep), ms = timed_run(r)
+    falls = [x for x in rep["recoveries"]
+             if x["action"] == "engine_fallback"]
+    add_cell("inner_overflow", "recover", rep, ms,
+             bool(np.isfinite(np.asarray(cf)).all()),
+             "engine_fallback", 0, fallback=falls[0]["detail"])
+
+    # process kill -> checkpoint auto-resume
+    r = ResilientMDRunner(eng, tmp / "ck_kill",
+                          plan=FaultPlan([FaultSpec("proc_kill", 12)]))
+    try:
+        r.run(n_steps, resume=False)
+    except ProcessKilled:
+        pass
+    r2 = ResilientMDRunner(eng, tmp / "ck_kill")
+    t0 = _time.perf_counter()
+    (cf, ci), _, rep = r2.run(n_steps)
+    ms = (_time.perf_counter() - t0) * 1e3 / max(n_steps - 12, 1)
+    add_cell("proc_kill", "recover", rep, ms, bitwise_vs_ref(cf, ci),
+             "resume", 0, resumed_from=rep["resumed_from"])
+
+    # device loss -> reshard onto the spare mesh
+    r = ResilientMDRunner(eng, tmp / "ck_loss",
+                          plan=FaultPlan([FaultSpec("device_loss", 12)]),
+                          spare_mesh=make_mesh((1, 1, 1), ("z", "y", "x")))
+    ((cf, ci), _, rep), ms = timed_run(r)
+    add_cell("device_loss", "recover", rep, ms, False, "reshard", 0)
+
+    doc = {
+        "suite": "resilience",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": smoke,
+        "n_steps": n_steps,
+        "cells": cells,
+        "gate": {
+            # resilience cells are keyed on fault site x recovery mode,
+            # not the pipeline suite's (mode, depth, ...) identity
+            "key_fields": ["site", "mode"],
+            "exact": ["detection_latency_steps", "wasted_steps",
+                      "n_recoveries", "final_action", "bitwise",
+                      "resharded"],
+            "rel_tol": {},
+            "timing_factor": 10.0,
+            "timing_keys": ["ms_per_step", "degraded_step_ratio"],
+        },
+    }
+    path = Path(out) if out else RESULTS / "BENCH_resilience.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1))
+    emit("resilience/cells", 0.0, str(len(cells)))
+
+
 ALL = {
     "fig3": fig3_intranode_strong_scaling,
     "fig5": fig5_multinode_critical_path,
@@ -396,4 +556,5 @@ ALL = {
     "lm": lm_microbench,
     "nb": nb_bench,
     "pipeline": pipeline_bench,
+    "resilience": resilience_bench,
 }

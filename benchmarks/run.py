@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run --suite nb [--smoke]
   PYTHONPATH=src python -m benchmarks.run --suite pipeline --smoke \
       [--out results/BENCH_pipeline.current.json]
+  PYTHONPATH=src python -m benchmarks.run --suite resilience --smoke
 
 Default mode is quick (CI-sized); --full runs the complete sweeps.
 ``--suite nb`` runs the NB force-engine suite (dense vs sparse vs pallas
@@ -13,6 +14,8 @@ pair schedules) and writes ``results/BENCH_nb.json``; ``--suite
 pipeline`` runs the perf-trajectory suite (backend x pipeline mode x
 depth) and writes the schema-versioned ``BENCH_pipeline.json`` the CI
 ``perf-smoke`` job drift-checks with ``python -m repro.obs gate``;
+``--suite resilience`` drills every fault site through the
+self-healing runner and writes ``BENCH_resilience.json`` (same gate);
 ``--smoke`` is the CI-sized variant, ``--out`` redirects the suite file
 (so a CI re-run never clobbers the checked-in baseline).
 """
@@ -29,23 +32,25 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--suite", default=None,
-                    choices=("paper", "nb", "pipeline"),
+                    choices=("paper", "nb", "pipeline", "resilience"),
                     help="named suite: 'nb' = force-engine bench "
                          "(BENCH_nb.json), 'pipeline' = perf-trajectory "
-                         "bench (BENCH_pipeline.json), 'paper' = all "
-                         "figures")
+                         "bench (BENCH_pipeline.json), 'resilience' = "
+                         "fault-recovery bench (BENCH_resilience.json), "
+                         "'paper' = all figures")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized suite variant (implies quick mode)")
     ap.add_argument("--out", default=None,
                     help="override the pipeline suite's output file")
     args = ap.parse_args()
 
-    if args.suite in ("nb", "pipeline"):
+    if args.suite in ("nb", "pipeline", "resilience"):
         names = [args.suite]
     elif args.only:
         names = args.only.split(",")
     else:
-        names = [n for n in ALL if n not in ("nb", "pipeline")]
+        names = [n for n in ALL
+                 if n not in ("nb", "pipeline", "resilience")]
     print("name,us_per_call,derived")
     for name in names:
         fn = ALL[name]
@@ -53,7 +58,7 @@ def main() -> None:
         try:
             if name == "nb":
                 fn(smoke=args.smoke or not args.full)
-            elif name == "pipeline":
+            elif name in ("pipeline", "resilience"):
                 fn(smoke=args.smoke or not args.full, out=args.out)
             elif name in ("fig3", "fig6", "lm"):
                 fn(quick=not args.full)

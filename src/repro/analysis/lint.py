@@ -41,6 +41,13 @@ RA008  unsynced-timing-span        a ``time.time()``/``perf_counter()`` span
                                    async dispatch means the clock measures
                                    launch, not completion (use
                                    ``repro.obs.span`` / ``repro.obs.time_fn``)
+RA009  bare-except-in-recovery     ``except:`` / ``except Exception`` whose
+                                   handler neither re-raises nor records the
+                                   error (no ``raise``, and no call that
+                                   warns/logs/prints/latches a fallback) — a
+                                   self-healing runtime must never silently
+                                   eat a fault it cannot classify; catch the
+                                   concrete types, or make the swallow loud
 ====== ==========================  =============================================
 
 Suppression: append ``# noqa`` (all rules) or ``# noqa: RA005, RA007``
@@ -89,6 +96,8 @@ RULES: Dict[str, Rule] = {r.code: r for r in (
     Rule("RA008", "unsynced-timing-span",
          "timing span over dispatched work stops the clock without "
          "block_until_ready"),
+    Rule("RA009", "bare-except-in-recovery",
+         "broad except swallows the error without re-raise or logging"),
 )}
 
 
@@ -650,6 +659,59 @@ def _check_timing_spans(model: _FileModel, out: List[Diagnostic]) -> None:
                     "`repro.obs.time_fn`)"))
 
 
+_BROAD_EXC = {"Exception", "BaseException"}
+# a handler "records" the error when it calls anything that, by name,
+# warns / logs / prints / emits / latches a fallback / records a report
+_HANDLER_OK_RE = re.compile(
+    r"(warn|warning|error|exception|critical|print|log|emit|fail|"
+    r"fallback|record|latch)", re.IGNORECASE)
+
+
+def _is_broad_except(type_node: Optional[ast.AST]) -> bool:
+    if type_node is None:                 # bare `except:`
+        return True
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad_except(el) for el in type_node.elts)
+    fq = _qual(type_node) or ""
+    return fq.split(".")[-1] in _BROAD_EXC
+
+
+def _check_except_handlers(model: _FileModel, out: List[Diagnostic]) -> None:
+    """RA009: broad ``except`` that silently eats the error.
+
+    A recovery path may catch broadly only when the handler either
+    re-raises (possibly a narrower typed error) or makes the swallow
+    loud — ``warnings.warn``, a logger call, ``print``, an obs
+    ``emit``/``record``, or a warn-once fallback latch (the
+    ``_latch_*_fallback`` idiom).  ``except SomeType:`` is never
+    flagged: catching concrete types is the fix, not a violation."""
+    for node in ast.walk(model.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad_except(node.type):
+            continue
+        handled = False
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Raise):
+                    handled = True
+                elif isinstance(sub, ast.Call):
+                    last = (_qual(sub.func) or "").split(".")[-1]
+                    if last and _HANDLER_OK_RE.search(last):
+                        handled = True
+            if handled:
+                break
+        if not handled:
+            caught = "bare `except:`" if node.type is None else \
+                f"`except {ast.unparse(node.type)}`"
+            out.append(Diagnostic(
+                model.path, node.lineno, node.col_offset, "RA009",
+                f"{caught} neither re-raises nor records the error; a "
+                "recovery path must not silently eat faults it cannot "
+                "classify — catch the concrete exception types, or "
+                "warn/log/re-raise in the handler"))
+
+
 # --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
@@ -707,6 +769,7 @@ def lint_models(models: Sequence[_FileModel]) -> List[Diagnostic]:
         _check_collective_axes(model, declared, project_consts, out)
         _check_scatter_modes(model, out)
         _check_timing_spans(model, out)
+        _check_except_handlers(model, out)
         seen = set()
         for d in out:
             key = (d.line, d.col, d.code)

@@ -163,6 +163,17 @@ class CheckpointManager:
         leaves = [out[k] for k in flat_like.keys()]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
+    def restore_latest(self, like: Any, shardings: Any = None):
+        """Restore the newest step whose hash verifies (corrupted or
+        truncated newer shards are skipped — the documented contract).
+
+        Returns ``(step, tree)`` or ``None`` when no valid checkpoint
+        exists."""
+        step = self.latest_valid_step()
+        if step is None:
+            return None
+        return step, self.restore(step, like, shardings=shardings)
+
     def manifest(self, step: int) -> Dict:
         d = self.dir / f"step_{step:010d}"
         return json.loads((d / "manifest.json").read_text())

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -169,6 +170,20 @@ class FusedBackend(HaloBackend):
                                         self._local_shape(plan, ext))
 
 
+def _latch_halo_fallback(plan, e: Exception, context: str) -> None:
+    """Downgrade this plan to its jnp/ppermute oracle and warn once.
+
+    Trace-time kernel failures are backend-specific and expected (the
+    documented CPU fallback); the latch makes the downgrade loud exactly
+    once per plan instead of silently eating the error every pulse."""
+    if not plan._pallas_broken:
+        warnings.warn(
+            f"Pallas halo kernel {context} ({type(e).__name__}: {e}); "
+            "this halo plan falls back to its jnp/ppermute oracle for "
+            "the rest of this process", RuntimeWarning, stacklevel=3)
+    plan._pallas_broken = True
+
+
 class PallasBackend(HaloBackend):
     """Pack/unpack through the Pallas kernels of ``kernels.halo_pack``.
 
@@ -194,8 +209,8 @@ class PallasBackend(HaloBackend):
                 from repro.kernels import halo_pack
                 return halo_pack.pack(src2d, jidx,
                                       interpret=plan.spec.interpret)
-            except Exception:  # pragma: no cover - backend-specific
-                plan._pallas_broken = True
+            except Exception as e:  # pragma: no cover - backend-specific
+                _latch_halo_fallback(plan, e, "pack failed")
         return jnp.take(src2d, jidx, axis=0)
 
     def _unpack_add(self, plan, dst2d: jnp.ndarray, idx: np.ndarray,
@@ -206,8 +221,8 @@ class PallasBackend(HaloBackend):
                 from repro.kernels import halo_pack
                 return halo_pack.unpack_add(dst2d, jidx, rows,
                                             interpret=plan.spec.interpret)
-            except Exception:  # pragma: no cover - backend-specific
-                plan._pallas_broken = True
+            except Exception as e:  # pragma: no cover - backend-specific
+                _latch_halo_fallback(plan, e, "unpack_add failed")
         return dst2d.at[jidx].add(rows, mode="drop")
 
     # -- static index maps (built once per local shape, cached) ------------

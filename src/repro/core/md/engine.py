@@ -65,8 +65,30 @@ from repro.core.md.schedule_opt import bucket, tier_cum, tier_plan, tier_rows
 from repro.core.md.schedule_opt import noop  # critical-path opt hook (§5.4)
 from repro.core.md.system import MDSystem
 from repro.core.pipeline import PIPELINE_MODES, StepFns, StepPipeline
+from repro.core.pipeline.ledger import DISARMED, SCAN_FAULT_SITES
 from repro.obs import PhaseTracer, default_registry
 from repro.obs import span as obs_span
+
+
+@dataclasses.dataclass
+class RunState:
+    """Live block-loop state of one simulation run.
+
+    :meth:`MDEngine.begin_run` creates it; :meth:`MDEngine.run_block` and
+    :meth:`MDEngine.advance_schedule` mutate it in place.  ``simulate``
+    is a thin loop over these three, and the resilience runner
+    (:mod:`repro.resilience`) drives the same API with fault arming,
+    health reads, and checkpoint/rollback between blocks — both loops
+    visit bitwise-identical states.
+    """
+
+    cell_f: jax.Array
+    cell_i: jax.Array
+    force: jax.Array          # velocity-Verlet force carry (post-rebin)
+    sched: tuple | None       # (sel, tiers, tiers_inner) or None (dense)
+    disable: bool             # next refresh falls back to the outer ladder
+    step: int                 # steps completed so far
+    diags: list               # per-rebin migration diagnostics
 
 
 class MDEngine:
@@ -125,7 +147,8 @@ class MDEngine:
                  inner_safety: float = 1.5,
                  pair_bucket: int = PAIR_BUCKET,
                  verify: str = "error",
-                 obs=None, trace: bool = False):
+                 obs=None, trace: bool = False,
+                 inject: bool = False, health: bool = False):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -146,6 +169,31 @@ class MDEngine:
         if int(nstprune) < 0:
             raise ValueError("nstprune must be >= 0 (0 disables the "
                              "rolling inner prune)")
+        if inject and overlap_rebin:
+            raise ValueError(
+                "inject=True is incompatible with overlap_rebin: fault "
+                "epochs are block-aligned and the fused path would commit "
+                "a poisoned block's rebin/migration before the health "
+                "scalars are read at the boundary")
+        # deterministic fault injection (repro.resilience): inject=True
+        # builds the block programs with a traced fault-vector operand
+        # (ledger.SCAN_FAULT_SITES layout); inject=False traces the exact
+        # pre-existing programs — zero cost, bitwise-identical.  health
+        # adds the pmax'd in-scan monitors (NaN/Inf counts, ledger
+        # violations) to the block metrics.
+        self.inject = bool(inject)
+        self.health = bool(health)
+        # rebuild()/reshard() recreate the engine from these; captured
+        # before the tiny-box degrade below so a rebuilt engine re-derives
+        # its own fallbacks for the (possibly different) new layout
+        self._init_kwargs = dict(
+            spec=spec, r_list_factor=r_list_factor, mig_frac=mig_frac,
+            pipeline=pipeline, pipeline_depth=pipeline_depth,
+            overlap_rebin=overlap_rebin, force_backend=force_backend,
+            capacity_safety=capacity_safety, nstprune=nstprune,
+            inner_radius=inner_radius, inner_safety=inner_safety,
+            pair_bucket=pair_bucket, verify=verify, obs=obs, trace=trace,
+            inject=inject, health=health)
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
@@ -423,7 +471,16 @@ class MDEngine:
             mom = integrate.momentum(jnp.where(vmask, vel_new, 0.0),
                                      valid, mass)
             noop()  # schedule-optimization hook (see schedule_opt)
-            return cell_f, f_new, {"ke": ke, "mom": mom}
+            m = {"ke": ke, "mom": mom}
+            if self.health:
+                # in-scan NaN/Inf monitor: one pmax-free psum'd int32 per
+                # step over positions/velocities and the returned forces;
+                # a pure observer of barrier-pinned state, so trajectories
+                # stay bitwise-identical with health on
+                bad = (jnp.sum(~jnp.isfinite(cell_f), dtype=jnp.int32)
+                       + jnp.sum(~jnp.isfinite(f_new), dtype=jnp.int32))
+                m["health/nonfinite"] = lax.psum(bad, AXES)
+            return cell_f, f_new, m
 
         return StepFns(begin=begin, force=force, finish=finish)
 
@@ -443,17 +500,39 @@ class MDEngine:
                                            mode=self.pipeline_mode,
                                            depth=self.pipeline_depth,
                                            verify="off",
-                                           tracer=self.tracer)
+                                           tracer=self.tracer,
+                                           inject=self.inject)
         sc = self.tracer.scope
 
-        def block(cell_f, cell_i, force, n_steps):
-            ctx = self._block_ctx(cell_i)
-            cell_f, f_last, metrics, _led = self.pipeline.run_local(
+        def run_pipe(cell_f, force, n_steps, ctx):
+            """Pipeline invocation + the per-invocation ledger monitor."""
+            cell_f, f_last, m, led = self.pipeline.run_local(
                 cell_f, force, n_steps, ctx)
+            if self.health:
+                # ledger-invariant monitor: 1 iff any put-with-signal
+                # bookkeeping law was violated over this invocation
+                # (undrained deposits, acquire-before-release, slot
+                # clobber) — pmax'd so every device reports the global
+                # verdict, read with the other boundary scalars
+                lg = self.pipeline.ledger
+                bad = (jnp.not_equal(lg.in_flight(led), 0)
+                       | ~lg.consistent(led)
+                       | ~lg.window_safe(led)).astype(jnp.int32)
+                m = {**m, "health/led_violation": lax.pmax(bad, AXES)[None]}
+            return cell_f, f_last, m
+
+        def block_impl(cell_f, cell_i, force, fv, n_steps):
+            ctx = self._block_ctx(cell_i)
+            if fv is not None:
+                ctx["fault_vec"] = fv
+            cell_f, f_last, metrics = run_pipe(cell_f, force, n_steps, ctx)
             return cell_f, cell_i, f_last, metrics
 
-        def block_sched(cell_f, cell_i, force, sel, n_steps, tiers,
-                        tiers_inner):
+        def block(cell_f, cell_i, force, n_steps):
+            return block_impl(cell_f, cell_i, force, None, n_steps)
+
+        def block_sched_impl(cell_f, cell_i, force, sel, fv, n_steps,
+                             tiers, tiers_inner):
             """Pruned-backend block; ``tiers``/``tiers_inner`` static.
 
             With an inner ladder the block is a python-unrolled chain of
@@ -471,8 +550,10 @@ class MDEngine:
                 ctx["pair_sel"] = lax.slice(sel_flat, (0,),
                                             (tier_rows(tiers),))
                 ctx["tiers"] = tiers
-                cell_f, f_last, metrics, _led = self.pipeline.run_local(
-                    cell_f, force, n_steps, ctx)
+                if fv is not None:
+                    ctx["fault_vec"] = fv
+                cell_f, f_last, metrics = run_pipe(cell_f, force, n_steps,
+                                                   ctx)
                 return cell_f, cell_i, f_last, metrics, zero
             L = self.pair_schedule.levels
             budget = jnp.asarray(tier_cum(tiers_inner, SLOT_QUANTUM, L),
@@ -498,14 +579,25 @@ class MDEngine:
                 ctx_s = dict(ctx)
                 ctx_s["pair_sel"] = lax.slice(sel_exec, (0,), (n_inner,))
                 ctx_s["tiers"] = tiers_inner
-                cell_f, f_cur, m, _led = self.pipeline.run_local(
-                    cell_f, f_cur, take, ctx_s)
+                if fv is not None:
+                    # rebase block-relative fault steps onto this
+                    # sub-block's local scan indices; out-of-range sites
+                    # stay disarmed here and fire in their own sub-block
+                    ctx_s["fault_vec"] = jnp.where(
+                        (fv >= done) & (fv < done + take),
+                        fv - done, jnp.int32(DISARMED))
+                cell_f, f_cur, m = run_pipe(cell_f, f_cur, take, ctx_s)
                 chunks.append(m)
                 done += take
             metrics = {k: jnp.concatenate([c[k] for c in chunks])
                        for k in chunks[0]}
             return (cell_f, cell_i, f_cur, metrics,
                     lax.pmax(overflow, AXES))
+
+        def block_sched(cell_f, cell_i, force, sel, n_steps, tiers,
+                        tiers_inner):
+            return block_sched_impl(cell_f, cell_i, force, sel, None,
+                                    n_steps, tiers, tiers_inner)
 
         def do_rebin(cell_f, cell_i):
             new_f, new_i, diag = rebin(cell_f, cell_i, layout, mig_cap)
@@ -553,15 +645,27 @@ class MDEngine:
                     cum_inner, occ, ovf)
 
         spec = self._spec
-        self.block_fn = jax.jit(
-            shard_map_norep(
-                functools.partial(block),
-                mesh=self.mesh,
-                in_specs=(spec, spec, spec, None),
-                out_specs=(spec, spec, spec, P()),
-            ),
-            static_argnums=(3,),
-        )
+        if self.inject:
+            # the fault vector is a small replicated operand — NOT a jit
+            # constant — so re-arming between blocks never retraces
+            self.block_fn = jax.jit(
+                shard_map_norep(
+                    block_impl, mesh=self.mesh,
+                    in_specs=(spec, spec, spec, P(), None),
+                    out_specs=(spec, spec, spec, P()),
+                ),
+                static_argnums=(4,),
+            )
+        else:
+            self.block_fn = jax.jit(
+                shard_map_norep(
+                    functools.partial(block),
+                    mesh=self.mesh,
+                    in_specs=(spec, spec, spec, None),
+                    out_specs=(spec, spec, spec, P()),
+                ),
+                static_argnums=(3,),
+            )
         self.rebin_fn = jax.jit(shard_map_norep(
             do_rebin, mesh=self.mesh, in_specs=(spec, spec),
             out_specs=(spec, spec, spec, P())))
@@ -578,14 +682,25 @@ class MDEngine:
                 static_argnums=(3,),
             )
         if self.force_backend != "dense":
-            self.block_sched_fn = jax.jit(
-                shard_map_norep(
-                    block_sched, mesh=self.mesh,
-                    in_specs=(spec, spec, spec, spec, None, None, None),
-                    out_specs=(spec, spec, spec, P(), P()),
-                ),
-                static_argnums=(4, 5, 6),
-            )
+            if self.inject:
+                self.block_sched_fn = jax.jit(
+                    shard_map_norep(
+                        block_sched_impl, mesh=self.mesh,
+                        in_specs=(spec, spec, spec, spec, P(), None, None,
+                                  None),
+                        out_specs=(spec, spec, spec, P(), P()),
+                    ),
+                    static_argnums=(5, 6, 7),
+                )
+            else:
+                self.block_sched_fn = jax.jit(
+                    shard_map_norep(
+                        block_sched, mesh=self.mesh,
+                        in_specs=(spec, spec, spec, spec, None, None, None),
+                        out_specs=(spec, spec, spec, P(), P()),
+                    ),
+                    static_argnums=(4, 5, 6),
+                )
             self.prune_fn = jax.jit(shard_map_norep(
                 do_prune, mesh=self.mesh, in_specs=(spec, spec),
                 out_specs=(spec, P(), P(), P())))
@@ -735,6 +850,113 @@ class MDEngine:
                 stacklevel=3)
         return True
 
+    def begin_run(self, state=None, disable_inner: bool = False):
+        """Open a block-loop run: bin (or adopt) the state, run the first
+        rebin + prune, and return the live :class:`RunState`.
+
+        ``disable_inner=True`` starts the first block on the outer ladder
+        (the resume-after-overflow / degraded-restore path)."""
+        if state is None:
+            cell_f, cell_i = self.init_state()
+        else:
+            cell_f, cell_i = state
+        with obs_span("rebin_dispatch", self.obs):
+            cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
+            sched = self._refresh_schedule(cell_f, cell_i,
+                                           disable_inner=disable_inner)
+        return RunState(cell_f, cell_i, force, sched,
+                        bool(disable_inner), 0, [jax.device_get(diag)])
+
+    def _fault_operand(self, fault_vec):
+        """Normalize a fault vector to the replicated int32 operand the
+        injected block programs take (None = every site disarmed)."""
+        if fault_vec is None:
+            return jnp.full((len(SCAN_FAULT_SITES),), DISARMED, jnp.int32)
+        fv = jnp.asarray(fault_vec, jnp.int32)
+        if fv.shape != (len(SCAN_FAULT_SITES),):
+            raise ValueError(
+                f"fault_vec must have shape ({len(SCAN_FAULT_SITES)},) "
+                f"— one block-relative step per site in "
+                f"{SCAN_FAULT_SITES} — got {fv.shape}")
+        return fv
+
+    def run_block(self, rs: RunState, take: int, fuse: bool = False,
+                  fault_vec=None, force_overflow: bool = False):
+        """Advance one ``take``-step block on a live :class:`RunState`
+        (mutated in place); returns the block's device-side metrics.
+
+        ``fault_vec`` arms the scan fault sites of an ``inject=True``
+        engine for this block (``ledger.SCAN_FAULT_SITES`` layout,
+        block-relative steps, -1 disarmed); ``force_overflow`` feeds the
+        overflow monitor a synthetic trip (the forced-inner-ladder-
+        overflow fault site — only meaningful on the ``nstprune`` path).
+        """
+        if (fault_vec is not None or force_overflow) and not self.inject:
+            raise ValueError("fault arming requires an inject=True engine")
+        sched = rs.sched
+        with obs_span("block_dispatch", self.obs, steps=take,
+                      fused_rebin=fuse):
+            if fuse and sched is None:
+                rs.cell_f, rs.cell_i, rs.force, m, diag = \
+                    self.block_rebin_fn(rs.cell_f, rs.cell_i, rs.force,
+                                        take)
+            elif fuse:
+                sel, tiers, tiers_inner = sched
+                (rs.cell_f, rs.cell_i, rs.force, m, diag, sel2, cum,
+                 cum_inner, occ, ovf) = \
+                    self.block_sched_rebin_fn(rs.cell_f, rs.cell_i,
+                                              rs.force, sel, take, tiers,
+                                              tiers_inner)
+                rs.sched = self._bucket_exec(
+                    sel2, cum, cum_inner, occ,
+                    disable_inner=self._note_overflow(ovf))
+            elif sched is None:
+                if self.inject:
+                    rs.cell_f, rs.cell_i, rs.force, m = self.block_fn(
+                        rs.cell_f, rs.cell_i, rs.force,
+                        self._fault_operand(fault_vec), take)
+                else:
+                    rs.cell_f, rs.cell_i, rs.force, m = self.block_fn(
+                        rs.cell_f, rs.cell_i, rs.force, take)
+            else:
+                sel, tiers, tiers_inner = sched
+                if self.inject:
+                    rs.cell_f, rs.cell_i, rs.force, m, ovf = \
+                        self.block_sched_fn(
+                            rs.cell_f, rs.cell_i, rs.force, sel,
+                            self._fault_operand(fault_vec), take, tiers,
+                            tiers_inner)
+                else:
+                    rs.cell_f, rs.cell_i, rs.force, m, ovf = \
+                        self.block_sched_fn(rs.cell_f, rs.cell_i,
+                                            rs.force, sel, take, tiers,
+                                            tiers_inner)
+                # read the block's overflow scalar NOW (not at the next
+                # boundary) so a final block's overflow is still
+                # counted and warned — the monitor has no blind spot
+                rs.disable = self._note_overflow(
+                    jnp.int32(1) if force_overflow else ovf)
+        self.obs.counter("md/blocks").inc()
+        self.obs.counter("md/steps").inc(take)
+        rs.step += take
+        if fuse:
+            rs.diags.append(jax.device_get(diag))
+        return m
+
+    def advance_schedule(self, rs: RunState):
+        """The between-block rebin + prune (host-dispatched path only;
+        fused blocks already carried theirs)."""
+        old_sched = rs.sched
+        with obs_span("rebin_dispatch", self.obs):
+            cell_f, cell_i, force, diag = self.rebin_fn(rs.cell_f,
+                                                        rs.cell_i)
+            rs.sched = self._refresh_schedule(
+                cell_f, cell_i,
+                disable_inner=old_sched is not None and rs.disable)
+        rs.cell_f, rs.cell_i, rs.force = cell_f, cell_i, force
+        rs.disable = False
+        rs.diags.append(jax.device_get(diag))
+
     def simulate(self, n_steps: int, state=None, collect=True):
         """Run n_steps in nstlist-sized TPU-resident blocks.
 
@@ -747,63 +969,17 @@ class MDEngine:
         block boundary.
         """
         nst = self.system.params.nstlist
-        if state is None:
-            cell_f, cell_i = self.init_state()
-        else:
-            cell_f, cell_i = state
-        blocks_c = self.obs.counter("md/blocks")
-        steps_c = self.obs.counter("md/steps")
-        with obs_span("rebin_dispatch", self.obs):
-            cell_f, cell_i, force, diag = self.rebin_fn(cell_f, cell_i)
-            sched = self._refresh_schedule(cell_f, cell_i)
+        rs = self.begin_run(state)
         all_metrics = []
-        diags = [jax.device_get(diag)]
-        done = 0
-        while done < n_steps:
-            take = min(nst, n_steps - done)
-            fuse = self.overlap_rebin and done + take < n_steps
-            with obs_span("block_dispatch", self.obs, steps=take,
-                          fused_rebin=fuse):
-                if fuse and sched is None:
-                    cell_f, cell_i, force, m, diag = self.block_rebin_fn(
-                        cell_f, cell_i, force, take)
-                elif fuse:
-                    sel, tiers, tiers_inner = sched
-                    (cell_f, cell_i, force, m, diag, sel2, cum, cum_inner,
-                     occ, ovf) = \
-                        self.block_sched_rebin_fn(cell_f, cell_i, force,
-                                                  sel, take, tiers,
-                                                  tiers_inner)
-                    sched = self._bucket_exec(
-                        sel2, cum, cum_inner, occ,
-                        disable_inner=self._note_overflow(ovf))
-                elif sched is None:
-                    cell_f, cell_i, force, m = self.block_fn(cell_f, cell_i,
-                                                             force, take)
-                else:
-                    sel, tiers, tiers_inner = sched
-                    cell_f, cell_i, force, m, ovf = self.block_sched_fn(
-                        cell_f, cell_i, force, sel, take, tiers,
-                        tiers_inner)
-                    # read the block's overflow scalar NOW (not at the next
-                    # boundary) so a final block's overflow is still
-                    # counted and warned — the monitor has no blind spot
-                    disable = self._note_overflow(ovf)
-            blocks_c.inc()
-            steps_c.inc(take)
+        while rs.step < n_steps:
+            take = min(nst, n_steps - rs.step)
+            fuse = self.overlap_rebin and rs.step + take < n_steps
+            m = self.run_block(rs, take, fuse=fuse)
             if collect:
                 all_metrics.append(jax.device_get(m))
-            done += take
-            if fuse:
-                diags.append(jax.device_get(diag))
-            elif done < n_steps:
-                with obs_span("rebin_dispatch", self.obs):
-                    cell_f, cell_i, force, diag = self.rebin_fn(cell_f,
-                                                                cell_i)
-                    sched = self._refresh_schedule(
-                        cell_f, cell_i,
-                        disable_inner=sched is not None and disable)
-                diags.append(jax.device_get(diag))
+            if not fuse and rs.step < n_steps:
+                self.advance_schedule(rs)
+        cell_f, cell_i, diags = rs.cell_f, rs.cell_i, rs.diags
         metrics = {}
         if collect and all_metrics:
             metrics = {k: np.concatenate([np.atleast_1d(m[k])
@@ -832,3 +1008,58 @@ class MDEngine:
             dest[ids[valid]] = flat[valid]
             out.append(dest)
         return out
+
+    # ---- elasticity (rebuild / reshard) -----------------------------------
+
+    def export_atoms(self, state) -> dict:
+        """Mesh-independent snapshot of a cell state: per-atom positions
+        and velocities in global-id order (the portable half of a
+        checkpoint — restorable onto any mesh/layout)."""
+        cell_f, cell_i = state
+        pos, vel = self.gather_by_id(
+            [cell_f[..., :3], cell_f[..., 4:7]], cell_i)
+        return {"pos": pos, "vel": vel}
+
+    def rebuild(self, mesh: Mesh = None, system: MDSystem = None,
+                **overrides) -> "MDEngine":
+        """A fresh engine with this engine's construction parameters,
+        selectively overridden.
+
+        Any ``__init__`` keyword can be overridden; additionally
+        ``backend="..."`` rewrites the halo spec's backend (the degrade
+        ladder's signal→serialized rung).  The caller re-enters via
+        :meth:`begin_run` / :meth:`init_state` — compiled programs are
+        not carried over.
+        """
+        kw = dict(self._init_kwargs)
+        backend = overrides.pop("backend", None)
+        kw.update(overrides)
+        if backend is not None:
+            base = kw["spec"] if kw["spec"] is not None else \
+                HaloSpec(axis_names=AXES, widths=(1, 1, 1))
+            kw["spec"] = dataclasses.replace(base, backend=backend)
+        return MDEngine(system if system is not None else self.system,
+                        mesh if mesh is not None else self.mesh, **kw)
+
+    def reshard(self, mesh: Mesh, state=None, atoms=None,
+                **overrides) -> "MDEngine":
+        """Elastic reshard: rebuild this engine on a different mesh and
+        carry the atoms over (the device-loss shrink path, promoting the
+        ``check_elastic.py`` restore-on-smaller-mesh math to runtime).
+
+        Pass either the live cell ``state`` (exported here) or a
+        pre-exported ``atoms`` dict (the checkpointed form — the one a
+        *lost* device's state is recovered from).  Returns the new
+        engine; the caller re-bins with ``begin_run()`` (``init_state``
+        re-bins the carried atoms under the new layout/sharding).
+        """
+        if atoms is None:
+            if state is None:
+                raise ValueError("reshard needs `state` or `atoms`")
+            atoms = self.export_atoms(state)
+        dt = self.system.pos.dtype
+        system = dataclasses.replace(
+            self.system,
+            pos=np.asarray(atoms["pos"], dt),
+            vel=np.asarray(atoms["vel"], dt))
+        return self.rebuild(mesh=mesh, system=system, **overrides)

@@ -30,6 +30,18 @@ import jax.numpy as jnp
 
 KINDS = ("fwd", "rev")   # coordinate halo signals / force-return signals
 
+# Deterministic fault injection (repro.resilience): canonical layout of
+# the traced fault vector the block programs thread through the scan when
+# an engine is built with ``inject=True``.  Entry ``s`` holds the
+# block-relative step index at which site ``s`` fires (``DISARMED`` = the
+# site stays healthy).  The layout lives here — next to the signal
+# bookkeeping the ``signal_drop`` site perturbs — so the pipeline and
+# ``repro.resilience.faults`` share one definition without an import
+# cycle through the engine.
+SCAN_FAULT_SITES = ("halo_corrupt", "force_nan", "signal_drop")
+FAULT_HALO, FAULT_FORCE, FAULT_DROP = range(len(SCAN_FAULT_SITES))
+DISARMED = -1
+
 
 class LedgerState(NamedTuple):
     """Counters per ledger slot (pytree; scan-carry friendly)."""
@@ -88,6 +100,23 @@ class SignalLedger:
             (outstanding >= 1).astype(jnp.int32), mode="drop")
         return LedgerState(st.released.at[idx].add(1, mode="drop"),
                            st.acquired, clobbers)
+
+    def release_dropped(self, st: LedgerState, kind: str, buf,
+                        dropped) -> LedgerState:
+        """Injection hook: a put-with-signal whose signal may never land.
+
+        ``dropped`` is a traced bool; when True the release is *skipped*
+        (the data transfer itself still happens in the XLA model — this
+        is the "dropped or delayed put-with-signal" fault, where the
+        receiver's ledger sees a missing release), so the matching
+        acquire drives ``consistent()`` False and the block's health
+        scalar trips.  With ``dropped`` statically False this is exactly
+        :meth:`release`."""
+        rel = self.release(st, kind, buf)
+        return LedgerState(
+            jnp.where(dropped, st.released, rel.released),
+            jnp.where(dropped, st.acquired, rel.acquired),
+            jnp.where(dropped, st.clobbers, rel.clobbers))
 
     def acquire(self, st: LedgerState, kind: str, buf) -> LedgerState:
         """All of (kind, buf)'s pulse signals are consumed (acquire_wait)."""

@@ -37,7 +37,8 @@ from jax import lax
 
 from repro.compat import named_axes_in_scope
 from repro.core import halo as _halo
-from repro.core.halo_plan import PallasBackend, register_backend
+from repro.core.halo_plan import (PallasBackend, _latch_halo_fallback,
+                                  register_backend)
 
 
 class SignalBackend(PallasBackend):
@@ -75,8 +76,8 @@ class SignalBackend(PallasBackend):
                 return halo_pack.put_signal(src2d, jidx, axis=axis,
                                             ring=ring, shift=shift,
                                             interpret=plan.spec.interpret)
-            except Exception:  # pragma: no cover - backend-specific
-                plan._pallas_broken = True
+            except Exception as e:  # pragma: no cover - backend-specific
+                _latch_halo_fallback(plan, e, "put_signal failed")
         rows = jnp.take(src2d, jidx, axis=0)
         perm = (_halo._perm_fwd(ring) if shift == -1
                 else _halo._perm_rev(ring))
@@ -95,8 +96,8 @@ class SignalBackend(PallasBackend):
                                               axis=axis, ring=ring,
                                               n_local=n_local,
                                               interpret=plan.spec.interpret)
-            except Exception:  # pragma: no cover - backend-specific
-                plan._pallas_broken = True
+            except Exception as e:  # pragma: no cover - backend-specific
+                _latch_halo_fallback(plan, e, "fused_pulses failed")
         # jnp oracle with the kernel's exact semantics: entries >= n_local
         # read the previous pulse's receive buffer (staged forwarding),
         # padding entries produce zero rows, puts become ppermutes.

@@ -49,7 +49,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.halo_plan import HaloPlan
-from repro.core.pipeline.ledger import LedgerState, SignalLedger
+from repro.core.pipeline.ledger import (
+    FAULT_DROP,
+    FAULT_FORCE,
+    FAULT_HALO,
+    LedgerState,
+    SignalLedger,
+)
 from repro.obs.tracing import NULL_TRACER, PhaseTracer
 
 PIPELINE_MODES = ("off", "double_buffer")
@@ -99,7 +105,8 @@ class StepPipeline:
 
     def __init__(self, plan: HaloPlan, fns: StepFns,
                  mode: str = "double_buffer", depth: int = 2,
-                 verify: str = "error", tracer: PhaseTracer = None):
+                 verify: str = "error", tracer: PhaseTracer = None,
+                 inject: bool = False):
         if mode not in PIPELINE_MODES:
             raise ValueError(f"unknown pipeline mode {mode!r}; "
                              f"available: {PIPELINE_MODES}")
@@ -114,6 +121,13 @@ class StepPipeline:
         # trajectories stay bitwise-identical with tracing on (the obs
         # outputs are functions of counters the scan carry already holds).
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # deterministic fault injection (repro.resilience): when enabled,
+        # ctx must carry a ``fault_vec`` int32[3] of block-relative step
+        # indices (see ledger.SCAN_FAULT_SITES; -1 = disarmed) and the
+        # scan threads the step index so the poison/drop selects can key
+        # on it.  Zero-cost when disabled: inject=False traces the exact
+        # pre-existing program, operand for operand.
+        self.inject = bool(inject)
         self.depth = int(depth) if mode == "double_buffer" else 1
         self.ledger = SignalLedger(depth=self.depth,
                                    n_pulses=max(1, plan.sched.total_pulses))
@@ -130,10 +144,10 @@ class StepPipeline:
     @classmethod
     def build(cls, plan: HaloPlan, fns: StepFns, *,
               mode: str = "double_buffer", depth: int = 2,
-              verify: str = "error",
-              tracer: PhaseTracer = None) -> "StepPipeline":
+              verify: str = "error", tracer: PhaseTracer = None,
+              inject: bool = False) -> "StepPipeline":
         return cls(plan, fns, mode=mode, depth=depth, verify=verify,
-                   tracer=tracer)
+                   tracer=tracer, inject=inject)
 
     # -- execution (device-local: call inside the engine's shard_map) ------
 
@@ -175,19 +189,57 @@ class StepPipeline:
         with sc("rev_acquire"):
             return lax.optimization_barrier(f)
 
+    # -- fault injection (traced; every helper is behind ``self.inject``) --
+
+    def _fire(self, ctx, k, site):
+        """Traced predicate: does scan-fault ``site`` fire at in-block
+        step ``k``?  ``ctx["fault_vec"]`` holds block-relative arming
+        steps (-1 = disarmed), so a disarmed vector never matches."""
+        return jnp.equal(jnp.int32(k), ctx["fault_vec"][site])
+
+    def _poison_halo(self, ext, payload, fire):
+        """NaN the *received* halo slab — the trailing cells of the last
+        decomposed dim, i.e. everything the exchange appended beyond the
+        local payload — when ``fire``.  The corrupted-pulse fault: the
+        local block stays intact, only remote data is bad, so the NaN
+        reaches the trajectory through the force kernel exactly as a
+        corrupted put would."""
+        ax = len(self.plan.spec.axis_names) - 1
+        idx = (slice(None),) * ax + (slice(payload.shape[ax], None),)
+        slab = ext[idx]
+        bad = jnp.where(fire, jnp.full_like(slab, jnp.nan), slab)
+        return ext.at[idx].set(bad)
+
+    def _poison_force(self, F_ext, fire):
+        """NaN the force kernel's whole output slab when ``fire``."""
+        return jnp.where(fire, jnp.full_like(F_ext, jnp.nan), F_ext)
+
+    def _release_rev(self, led, buf, ctx, k):
+        """Rev (force-return) release, droppable under injection."""
+        if self.inject:
+            return self.ledger.release_dropped(
+                led, "rev", buf, self._fire(ctx, k, FAULT_DROP))
+        return self.ledger.release(led, "rev", buf)
+
     def _run_serial(self, state, f0, n_steps, ctx):
         fns, ledger, sc = self.fns, self.ledger, self.tracer.scope
 
-        def step(carry, _):
+        def step(carry, k):
             state, f, led = carry
             with sc("integrate_begin"):
                 state, aux, payload = fns.begin(state, f, ctx)
             led = ledger.release(led, "fwd", 0)
             ext = self._fwd(payload)
             led = ledger.acquire(led, "fwd", 0)
+            if self.inject:
+                ext = self._poison_halo(
+                    ext, payload, self._fire(ctx, k, FAULT_HALO))
             with sc("force"):
                 F_ext, m_force = fns.force(ext, ctx)
-            led = ledger.release(led, "rev", 0)
+            if self.inject:
+                F_ext = self._poison_force(
+                    F_ext, self._fire(ctx, k, FAULT_FORCE))
+            led = self._release_rev(led, 0, ctx, k)
             f_new = self._rev(F_ext)
             led = ledger.acquire(led, "rev", 0)
             with sc("integrate_finish"):
@@ -200,8 +252,9 @@ class StepPipeline:
                  **self.tracer.step_metrics(ledger, led)}
             return (state, f_new, led), m
 
+        xs = jnp.arange(n_steps, dtype=jnp.int32) if self.inject else None
         (state, f, led), metrics = lax.scan(
-            step, (state, f0, ledger.init()), None, length=n_steps)
+            step, (state, f0, ledger.init()), xs, length=n_steps)
         return state, f, metrics, led
 
     # -- the depth-d window ------------------------------------------------
@@ -232,10 +285,16 @@ class StepPipeline:
         led = ledger.release(led, "fwd", cur)
         ext = self._fwd(payload)
         led = ledger.acquire(led, "fwd", cur)
+        if self.inject:
+            ext = self._poison_halo(
+                ext, payload, self._fire(ctx, k, FAULT_HALO))
         with sc("force"):
             F_ext, m_force = fns.force(ext, ctx)
+        if self.inject:
+            F_ext = self._poison_force(
+                F_ext, self._fire(ctx, k, FAULT_FORCE))
         slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
-        led = ledger.release(led, "rev", cur)
+        led = self._release_rev(led, cur, ctx, k)
         # pin the step boundary (see _run_serial)
         state, slots = lax.optimization_barrier((state, slots))
         m_fin = {**m_fin, **self.tracer.step_metrics(ledger, led)}
@@ -252,10 +311,15 @@ class StepPipeline:
         led = ledger.release(ledger.init(), "fwd", 0)
         ext = self._fwd(payload)
         led = ledger.acquire(led, "fwd", 0)
+        if self.inject:
+            ext = self._poison_halo(
+                ext, payload, self._fire(ctx, 0, FAULT_HALO))
         F0, m_force0 = fns.force(ext, ctx)
+        if self.inject:
+            F0 = self._poison_force(F0, self._fire(ctx, 0, FAULT_FORCE))
         slots = jnp.zeros((depth,) + F0.shape, F0.dtype)
         slots = lax.dynamic_update_index_in_dim(slots, F0, 0, 0)
-        led = ledger.release(led, "rev", 0)
+        led = self._release_rev(led, 0, ctx, 0)
 
         m_force_chunks = [_stack1(m_force0)]
         m_fin_chunks = []

@@ -42,22 +42,24 @@ DEFAULT_GATE = {
 }
 
 
-def cell_key(cell: dict) -> Tuple:
-    return tuple(cell.get(f) for f in KEY_FIELDS)
+def cell_key(cell: dict, key_fields: Tuple[str, ...] = KEY_FIELDS) -> Tuple:
+    return tuple(cell.get(f) for f in key_fields)
 
 
-def _index(bench: dict) -> Dict[Tuple, dict]:
+def _index(bench: dict,
+           key_fields: Tuple[str, ...] = KEY_FIELDS) -> Dict[Tuple, dict]:
     out: Dict[Tuple, dict] = {}
     for cell in bench.get("cells", []):
-        key = cell_key(cell)
+        key = cell_key(cell, key_fields)
         if key in out:
             raise ValueError(f"duplicate bench cell {key}")
         out[key] = cell
     return out
 
 
-def _fmt_key(key: Tuple) -> str:
-    return "/".join(f"{f}={v}" for f, v in zip(KEY_FIELDS, key))
+def _fmt_key(key: Tuple,
+             key_fields: Tuple[str, ...] = KEY_FIELDS) -> str:
+    return "/".join(f"{f}={v}" for f, v in zip(key_fields, key))
 
 
 def compare_bench(baseline: dict, current: dict) -> List[str]:
@@ -70,14 +72,20 @@ def compare_bench(baseline: dict, current: dict) -> List[str]:
             f"{current.get('schema_version')}")
         return problems
     gate = {**DEFAULT_GATE, **baseline.get("gate", {})}
-    base_cells, cur_cells = _index(baseline), _index(current)
+    # suites whose cells have a different identity (e.g. the resilience
+    # suite keys on fault site x recovery mode) declare their own
+    # key_fields in the gate section, next to the tolerances
+    kf = tuple(gate.get("key_fields", KEY_FIELDS))
+    base_cells, cur_cells = _index(baseline, kf), _index(current, kf)
     for key in sorted(set(base_cells) - set(cur_cells), key=repr):
-        problems.append(f"cell missing from current run: {_fmt_key(key)}")
+        problems.append(
+            f"cell missing from current run: {_fmt_key(key, kf)}")
     for key in sorted(set(cur_cells) - set(base_cells), key=repr):
-        problems.append(f"cell not in baseline (update it): {_fmt_key(key)}")
+        problems.append(
+            f"cell not in baseline (update it): {_fmt_key(key, kf)}")
     for key in sorted(set(base_cells) & set(cur_cells), key=repr):
         b, c = base_cells[key], cur_cells[key]
-        where = _fmt_key(key)
+        where = _fmt_key(key, kf)
         for f in gate["exact"]:
             if b.get(f) != c.get(f):
                 problems.append(f"{where}: {f} drift "

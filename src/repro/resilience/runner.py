@@ -1,0 +1,295 @@
+"""ResilientMDRunner: the self-healing MD block loop.
+
+Drives ``MDEngine.begin_run / run_block / advance_schedule`` exactly as
+``MDEngine.simulate`` does — visiting bitwise-identical states when
+nothing fires — but between blocks it also:
+
+* arms the :class:`~repro.resilience.faults.FaultPlan`'s scan/host
+  faults for the coming block,
+* reads the in-scan health scalars through
+  :class:`~repro.resilience.monitors.HealthMonitor` (no extra host
+  round-trips — they ride the block metrics),
+* checkpoints every clean block boundary (pre-rebin state, so restore +
+  ``begin_run`` replays the exact rebin the uninterrupted run performs
+  — rollback is bitwise), and
+* on a tripped monitor asks the
+  :class:`~repro.resilience.policy.RecoveryPolicy`: rollback with
+  bounded backoff, degrade down the ladder (engine ``rebuild`` with the
+  rung's overrides), reshard onto a spare mesh (device loss), or raise
+  ``RecoveryExhausted``.
+
+A :class:`~repro.resilience.policy.Watchdog` observes per-block wall
+time (the straggler signal that, at scale, triggers the same
+checkpoint-and-remesh path device loss does here).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.md.domain import AXES
+from repro.core.md.engine import MDEngine
+from repro.resilience.faults import (
+    DeviceLost,
+    FaultPlan,
+    ProcessKilled,
+    RecoveryExhausted,
+    ResilienceError,
+)
+from repro.resilience.monitors import HealthEvent, HealthMonitor
+from repro.resilience.policy import RecoveryPolicy, Watchdog
+
+
+class ResilientMDRunner:
+    """Fault-injecting, self-healing driver around one :class:`MDEngine`.
+
+    The engine must be built with ``health=True`` (the in-scan monitors
+    are the detection path) and, if the plan carries scan or overflow
+    faults, with ``inject=True``.  ``spare_mesh`` is the failover mesh
+    consumed by the device-loss → ``reshard`` escalation.
+    """
+
+    def __init__(self, engine: MDEngine, ckpt_dir,
+                 plan: Optional[FaultPlan] = None,
+                 policy: Optional[RecoveryPolicy] = None,
+                 monitor: Optional[HealthMonitor] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 spare_mesh: Optional[Mesh] = None,
+                 keep: int = 3):
+        if not engine.health:
+            raise ValueError("ResilientMDRunner needs an MDEngine built "
+                             "with health=True (the detection path)")
+        self.plan = plan if plan is not None else FaultPlan()
+        if self.plan.scan_or_overflow_sites and not engine.inject:
+            raise ValueError("the fault plan carries scan/overflow sites; "
+                             "build the engine with inject=True")
+        self.engine = engine
+        self.policy = policy if policy is not None else RecoveryPolicy()
+        self.monitor = monitor if monitor is not None else \
+            HealthMonitor(registry=engine.obs)
+        self.watchdog = watchdog if watchdog is not None else Watchdog()
+        self.spare_mesh = spare_mesh
+        self._mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.report: dict = {"events": [], "recoveries": [],
+                             "wasted_steps": 0, "checkpoint_steps": [],
+                             "resumed_from": None, "resharded": False}
+
+    # -- checkpoint plumbing ----------------------------------------------
+
+    def _like(self, eng: MDEngine):
+        G, K = eng.layout.global_cells, eng.layout.capacity
+        dt = eng.system.pos.dtype
+        n = eng.system.n_atoms
+        return {
+            "cell_f": jax.ShapeDtypeStruct(tuple(G) + (K, 7), dt),
+            "cell_i": jax.ShapeDtypeStruct(tuple(G) + (K, 2), np.int32),
+            "atoms": {"pos": jax.ShapeDtypeStruct((n, 3), dt),
+                      "vel": jax.ShapeDtypeStruct((n, 3), dt)},
+        }
+
+    def _shardings(self, eng: MDEngine):
+        sh = NamedSharding(eng.mesh, P(*AXES))
+        return {"cell_f": sh, "cell_i": sh}   # atoms stay host-side
+
+    def _save(self, eng: MDEngine, state, step: int, disable: bool):
+        cell_f, cell_i = state
+        self._mgr.save(step,
+                       {"cell_f": cell_f, "cell_i": cell_i,
+                        "atoms": eng.export_atoms(state)},
+                       extra={"step": int(step), "disable": bool(disable)})
+        self.report["checkpoint_steps"].append(int(step))
+        eng.obs.counter("resilience/checkpoints").inc()
+
+    def _restore(self, eng: MDEngine):
+        """Rewind to the last good block: restored pre-rebin state +
+        ``begin_run`` replays the exact boundary rebin/prune."""
+        res = self._mgr.restore_latest(self._like(eng),
+                                       self._shardings(eng))
+        if res is None:
+            raise ResilienceError("no valid checkpoint to roll back to")
+        step_c, tree = res
+        extra = self._mgr.manifest(step_c)["extra"]
+        rs = eng.begin_run((tree["cell_f"], tree["cell_i"]),
+                           disable_inner=bool(extra.get("disable", False)))
+        rs.step = int(extra.get("step", step_c))
+        self.monitor.reset()
+        return rs
+
+    # -- recovery actions --------------------------------------------------
+
+    def _record(self, action: str, kinds, step0: int, take: int,
+                events, attempt: int, detail: str = ""):
+        latency = [int(step0 + take - ev.step) for ev in events] or [0]
+        rec = {"action": action, "kinds": sorted(kinds),
+               "block_step": int(step0), "attempt": int(attempt),
+               "detection_latency_steps": max(latency),
+               "rollback_steps": int(take), "detail": detail}
+        self.report["recoveries"].append(rec)
+        self.engine.obs.emit("recovery", **rec)
+
+    def _degrade(self, rung):
+        """Rebuild the engine one rung down and retire the sites the rung
+        physically removes."""
+        self.engine = self.engine.rebuild(**rung.overrides)
+        self.policy.ladder.apply(rung)
+        self.plan.disable_sites(rung.clears)
+        self.engine.obs.emit("degrade", rung=rung.name,
+                             overrides=rung.overrides,
+                             clears=list(rung.clears))
+        return self._restore(self.engine)
+
+    def _reshard(self, step0: int):
+        """Device loss: recover the portable atom snapshot from the last
+        checkpoint, rebuild on the spare mesh, re-anchor the checkpoint
+        chain under the new layout."""
+        if self.spare_mesh is None:
+            raise DeviceLost(f"device loss at step {step0} with no spare "
+                             "mesh to reshard onto")
+        res = self._mgr.restore_latest(self._like(self.engine))
+        if res is None:
+            raise DeviceLost("device loss before any checkpoint existed")
+        step_c, tree = res
+        extra = self._mgr.manifest(step_c)["extra"]
+        eng2 = self.engine.reshard(self.spare_mesh, atoms=tree["atoms"])
+        self.engine, self.spare_mesh = eng2, None
+        self.report["resharded"] = True
+        eng2.obs.emit("reshard", step=step_c,
+                      mesh_shape=tuple(eng2.mesh.shape[a] for a in AXES))
+        state2 = eng2.init_state()
+        self._save(eng2, state2, step_c,
+                   bool(extra.get("disable", False)))
+        rs = eng2.begin_run(state2,
+                            disable_inner=bool(extra.get("disable",
+                                                         False)))
+        rs.step = int(extra.get("step", step_c))
+        self.monitor.reset()
+        return rs
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, n_steps: int, state=None, collect: bool = True,
+            resume: bool = True):
+        """Run ``n_steps``; returns ``((cell_f, cell_i), metrics,
+        report)``.  With ``resume=True`` a valid checkpoint in
+        ``ckpt_dir`` continues that run (the post-kill path)."""
+        eng = self.engine
+        nst = eng.system.params.nstlist
+        rs = None
+        if resume:
+            res = self._mgr.restore_latest(self._like(eng),
+                                           self._shardings(eng))
+            if res is not None:
+                step_c, tree = res
+                extra = self._mgr.manifest(step_c)["extra"]
+                rs = eng.begin_run(
+                    (tree["cell_f"], tree["cell_i"]),
+                    disable_inner=bool(extra.get("disable", False)))
+                rs.step = int(extra.get("step", step_c))
+                self.report["resumed_from"] = rs.step
+        if rs is None:
+            if state is None:
+                state = eng.init_state()
+            # step-0 anchor: the PRE-rebin state, so a rollback to it
+            # replays begin_run's rebin exactly once, like the clean run
+            self._save(eng, state, 0, False)
+            rs = eng.begin_run(state)
+
+        all_metrics, attempt = [], 0
+        while rs.step < n_steps:
+            eng = self.engine
+            take = min(nst, n_steps - rs.step)
+            step0 = rs.step
+
+            # host-side faults fire at the boundary, before the block
+            host = self.plan.host_pending(step0, step0 + take)
+            kills = [i for i, s in host if s.site == "proc_kill"]
+            if kills:
+                self.plan.mark_fired(kills)
+                self._mgr.wait()
+                raise ProcessKilled(
+                    f"injected process kill at step {step0}")
+            losses = [i for i, s in host if s.site == "device_loss"]
+            if losses:
+                self.plan.mark_fired(losses)
+                ev = HealthEvent("device_loss", step0)
+                self.report["events"].append(vars(ev))
+                act = self.policy.decide({"device_loss"}, attempt)
+                self._record(act.kind, {"device_loss"}, step0, 0, [ev],
+                             attempt)
+                rs = self._reshard(step0)
+                attempt = 0
+                continue
+
+            fv, armed = self.plan.arm_scan(step0, step0 + take)
+            ovf, ovf_armed = self.plan.overflow_armed(step0, step0 + take)
+            t0 = time.time()
+            m = eng.run_block(rs, take, fault_vec=fv, force_overflow=ovf)
+            mh = jax.device_get(m)     # sync: boundary scalar read
+            self.watchdog.observe(step0 // max(nst, 1),
+                                  time.time() - t0)
+            self.plan.mark_fired(armed)
+            self.plan.mark_fired(ovf_armed)
+            if ovf:
+                # the engine's own outer-ladder fallback IS the recovery
+                # (next block runs the outer list); record, don't rewind
+                ev = HealthEvent("overflow", step0)
+                self.report["events"].append(vars(ev))
+                self._record("engine_fallback", {"overflow"}, step0, 0,
+                             [ev], attempt, detail="outer_ladder")
+
+            events = self.monitor.check_block(mh, step0)
+            if events:
+                self.report["events"].extend(vars(e) for e in events)
+                kinds = {e.kind for e in events}
+                act = self.policy.decide(kinds, attempt)
+                self.report["wasted_steps"] += take
+                self._record(act.kind, kinds, step0, take, events,
+                             attempt,
+                             detail=act.rung.name if act.rung else "")
+                if act.kind == "rollback":
+                    time.sleep(act.backoff_s)
+                    rs = self._restore(eng)
+                    attempt += 1
+                elif act.kind == "degrade":
+                    rs = self._degrade(act.rung)
+                    attempt = 0
+                elif act.kind == "reshard":
+                    rs = self._reshard(step0)
+                    attempt = 0
+                else:
+                    raise RecoveryExhausted(
+                        f"unrecoverable events {sorted(kinds)} at step "
+                        f"{step0}: retries and degrade ladder exhausted")
+                continue
+
+            # clean block: commit it
+            attempt = 0
+            if collect:
+                all_metrics.append(mh)
+            self._save(eng, (rs.cell_f, rs.cell_i), rs.step,
+                       bool(rs.sched is not None and rs.disable))
+            if rs.step < n_steps:
+                eng.advance_schedule(rs)
+
+        self._mgr.wait()
+        metrics = {}
+        if collect and all_metrics:
+            keys = set(all_metrics[0])
+            for mh in all_metrics[1:]:
+                keys &= set(mh)
+            metrics = {k: np.concatenate([np.atleast_1d(m[k])
+                                          for m in all_metrics])
+                       for k in sorted(keys)}
+        self.report["watchdog_events"] = self.watchdog.events
+        self.report["fault_plan"] = self.plan.summary()
+        self.report["ladder"] = self.policy.ladder.summary()
+        self.engine.obs.emit("resilient_run", n_steps=n_steps,
+                             recoveries=len(self.report["recoveries"]),
+                             wasted_steps=self.report["wasted_steps"],
+                             resharded=self.report["resharded"])
+        return (rs.cell_f, rs.cell_i), metrics, self.report

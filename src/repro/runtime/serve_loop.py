@@ -1,10 +1,14 @@
 """Batched serving driver: prefill + lockstep decode with a request queue.
 
 Continuous-batching-lite: requests are admitted in waves; each wave is
-prefijled into the shared KV cache and decoded in lockstep (one jitted
+prefilled into the shared KV cache and decoded in lockstep (one jitted
 decode_step per token across the whole batch).  Per-request stop lengths
 mask finished rows (their outputs are ignored; slots recycle at the next
-wave boundary).  Greedy or temperature sampling.
+wave boundary).  Greedy or temperature sampling.  A per-wave deadline
+(``wave_timeout_s``) turns a decode step that never completes into a
+typed :class:`~repro.resilience.faults.WaveTimeout` instead of a hung
+queue, and an optional :class:`~repro.resilience.policy.Watchdog`
+watches per-wave wall time for stragglers.
 """
 from __future__ import annotations
 
@@ -15,6 +19,9 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.resilience.faults import WaveTimeout
+from repro.resilience.policy import Watchdog
 
 
 @dataclasses.dataclass
@@ -27,18 +34,27 @@ class Request:
 
 class BatchServer:
     def __init__(self, model, params, batch_size: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 wave_timeout_s: Optional[float] = None,
+                 watchdog: Optional[Watchdog] = None):
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_len = max_len
         self.temperature = temperature
+        self.wave_timeout_s = wave_timeout_s
+        self.watchdog = watchdog
+        self._waves = 0
         self.rng = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
 
     def serve_wave(self, requests: List[Request]) -> List[Request]:
-        """Serve up to B same-length-padded requests as one wave."""
+        """Serve up to B same-length-padded requests as one wave.
+
+        Raises :class:`WaveTimeout` when the wave's decode loop exceeds
+        ``wave_timeout_s`` — callers retire the wave and keep the queue
+        draining rather than hanging every later request behind it."""
         assert len(requests) <= self.B
         t0 = time.time()
         B = self.B
@@ -59,10 +75,24 @@ class BatchServer:
             logits, cache = self._decode(self.params, tok,
                                          jnp.int32(pos), cache)
             tok = self._sample(logits)
+            if self.wave_timeout_s is not None:
+                # sync the step before reading the clock: without it the
+                # deadline would be checked against dispatch time, not
+                # the (possibly hung) device work
+                jax.block_until_ready(tok)
+                elapsed = time.time() - t0
+                if elapsed > self.wave_timeout_s:
+                    raise WaveTimeout(
+                        f"wave exceeded {self.wave_timeout_s:.3f}s after "
+                        f"{t + 1}/{new_tokens} decode steps "
+                        f"({elapsed:.3f}s elapsed)")
         # the final sampled token is still in flight (outs[] reads synced
         # every earlier iteration) — block so dt covers the whole wave
         jax.block_until_ready(tok)
         dt = time.time() - t0
+        if self.watchdog is not None:
+            self.watchdog.observe(self._waves, dt)
+        self._waves += 1
         for i, r in enumerate(requests):
             r.out_tokens = outs[i, : r.max_new_tokens]
             r.latency_s = dt

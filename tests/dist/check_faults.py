@@ -1,0 +1,185 @@
+"""8-virtual-device fault matrix: every site x {recover, degrade}.
+
+The multi-device acceptance drill for the self-healing MD runtime: on a
+2x2x2 DD mesh, every :data:`~repro.resilience.faults.ALL_FAULT_SITES`
+entry is provoked and recovered —
+
+* one-shot scan faults (NaN'd halo payload, NaN'd force kernel, dropped
+  put-with-signal release) roll back and finish **bitwise** equal to the
+  fault-free reference;
+* sticky scan faults exhaust retries and walk the degrade ladder
+  (signal -> serialized halo is bitwise per the PR2 conformance bar;
+  sparse -> dense forces is drift-bound);
+* a forced inner-ladder overflow takes the engine's own outer-ladder
+  fallback (no rewind);
+* a process kill resumes bitwise from the checkpoint chain;
+* a device loss reshards 2x2x2 -> 1x2x2 (the shrink path) and finishes
+  within the NVE drift bound.
+
+Each scenario appends one JSON line to ``--out`` (default
+``results/obs/fault_matrix.jsonl``) — the recovery report artifact the
+CI ``fault-matrix`` job uploads.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python tests/dist/check_faults.py
+"""
+import argparse
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.core.halo_plan import HaloSpec
+from repro.core.md import MDEngine, make_grappa_like
+from repro.launch.mesh import make_mesh
+from repro.resilience import (
+    FaultPlan,
+    FaultSpec,
+    ProcessKilled,
+    RecoveryPolicy,
+    ResilientMDRunner,
+)
+
+AXES = ("z", "y", "x")
+N_STEPS = 18
+NSTLIST = 6
+
+
+def build_engine(system, mesh, **kw):
+    spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1), backend="signal")
+    return MDEngine(system, mesh, spec, pipeline="double_buffer",
+                    inject=True, health=True, **kw)
+
+
+def max_err(atoms, ref):
+    scale = max(np.abs(ref["vel"]).max(), 1e-9)
+    return float(max(np.abs(atoms["pos"] - ref["pos"]).max(),
+                     np.abs(atoms["vel"] - ref["vel"]).max() / scale))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/obs/fault_matrix.jsonl")
+    args = ap.parse_args()
+    assert len(jax.devices()) >= 8, "need 8 virtual devices"
+
+    tmp = Path(tempfile.mkdtemp(prefix="ck_faults_"))
+    mesh = make_mesh((2, 2, 2), AXES)
+    system = make_grappa_like(900, seed=3, nstlist=NSTLIST)
+
+    # fault-free reference: same signal/double_buffer config, no inject
+    spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1), backend="signal")
+    ref_eng = MDEngine(system, mesh, spec, pipeline="double_buffer")
+    (cf_r, ci_r), _, _ = ref_eng.simulate(N_STEPS)
+    ref_cf, ref_ci = np.asarray(cf_r), np.asarray(ci_r)
+    ref_atoms = ref_eng.export_atoms((cf_r, ci_r))
+
+    eng = build_engine(system, mesh)
+    rows = []
+
+    def record(site, mode, report, **extra):
+        row = {"site": site, "mode": mode,
+               "recoveries": report["recoveries"],
+               "wasted_steps": report["wasted_steps"],
+               "resharded": report["resharded"], **extra}
+        rows.append(row)
+        print(f"{site}/{mode}: "
+              + ", ".join(f"{k}={v}" for k, v in extra.items()))
+
+    # --- scan sites, one-shot -> rollback, bitwise ------------------------
+    for site, step in (("halo_corrupt", 8), ("force_nan", 13),
+                       ("signal_drop", 2)):
+        plan = FaultPlan([FaultSpec(site, step)])
+        r = ResilientMDRunner(eng, tmp / f"ck_{site}", plan=plan)
+        (cf, ci), _, report = r.run(N_STEPS, resume=False)
+        assert [x["action"] for x in report["recoveries"]] == ["rollback"]
+        assert report["recoveries"][0]["detection_latency_steps"] <= NSTLIST
+        np.testing.assert_array_equal(np.asarray(cf), ref_cf)
+        np.testing.assert_array_equal(np.asarray(ci), ref_ci)
+        record(site, "recover", report, bitwise=True,
+               latency=report["recoveries"][0]["detection_latency_steps"])
+
+    # --- sticky signal_drop -> degrade: serialized halo is bitwise --------
+    # (the PR2/check_md bar: signal and serialized trajectories match bit
+    # for bit, so removing the put-with-signal seam costs nothing here)
+    plan = FaultPlan([FaultSpec("signal_drop", 2, sticky=True)])
+    r = ResilientMDRunner(eng, tmp / "ck_drop_sticky", plan=plan,
+                          policy=RecoveryPolicy(max_retries=1,
+                                                backoff_base_s=0.0))
+    (cf, ci), _, report = r.run(N_STEPS, resume=False)
+    acts = [x["action"] for x in report["recoveries"]]
+    assert acts == ["rollback", "degrade"], acts
+    assert r.engine.spec.backend == "serialized"
+    np.testing.assert_array_equal(np.asarray(cf), ref_cf)
+    np.testing.assert_array_equal(np.asarray(ci), ref_ci)
+    record("signal_drop", "degrade", report, bitwise=True,
+           rung="serialized_halo")
+
+    # --- sticky force_nan -> degrade: dense forces, drift-bound ----------
+    plan = FaultPlan([FaultSpec("force_nan", 2, sticky=True)])
+    r = ResilientMDRunner(eng, tmp / "ck_nan_sticky", plan=plan,
+                          policy=RecoveryPolicy(max_retries=1,
+                                                backoff_base_s=0.0))
+    (cf, ci), _, report = r.run(N_STEPS, resume=False)
+    assert report["recoveries"][-1]["action"] == "degrade"
+    assert report["recoveries"][-1]["detail"] == "dense_forces"
+    err = max_err(r.engine.export_atoms((cf, ci)), ref_atoms)
+    assert err < 1e-4, err
+    record("force_nan", "degrade", report, rung="dense_forces",
+           max_err=err)
+
+    # --- forced inner-ladder overflow: the engine's own fallback ----------
+    eng_prune = build_engine(system, mesh, force_backend="sparse",
+                             nstprune=3)
+    plan = FaultPlan([FaultSpec("inner_overflow", 6)])
+    r = ResilientMDRunner(eng_prune, tmp / "ck_ovf", plan=plan)
+    (cf, ci), _, report = r.run(N_STEPS, resume=False)
+    falls = [x for x in report["recoveries"]
+             if x["action"] == "engine_fallback"]
+    assert len(falls) == 1 and falls[0]["detail"] == "outer_ladder"
+    assert report["wasted_steps"] == 0
+    assert np.isfinite(np.asarray(cf)).all()
+    record("inner_overflow", "recover", report, fallback="outer_ladder")
+
+    # --- process kill -> checkpoint auto-resume, bitwise ------------------
+    plan = FaultPlan([FaultSpec("proc_kill", 12)])
+    r = ResilientMDRunner(eng, tmp / "ck_kill", plan=plan)
+    try:
+        r.run(N_STEPS, resume=False)
+        raise AssertionError("proc_kill did not fire")
+    except ProcessKilled:
+        pass
+    r2 = ResilientMDRunner(eng, tmp / "ck_kill")
+    (cf, ci), _, report = r2.run(N_STEPS)
+    assert report["resumed_from"] == 12
+    np.testing.assert_array_equal(np.asarray(cf), ref_cf)
+    np.testing.assert_array_equal(np.asarray(ci), ref_ci)
+    record("proc_kill", "recover", report, bitwise=True, resumed_from=12)
+
+    # --- device loss -> reshard 2x2x2 -> 1x2x2 (shrink), drift-bound ------
+    spare = make_mesh((1, 2, 2), AXES)
+    plan = FaultPlan([FaultSpec("device_loss", 12)])
+    r = ResilientMDRunner(eng, tmp / "ck_loss", plan=plan,
+                          spare_mesh=spare)
+    (cf, ci), _, report = r.run(N_STEPS, resume=False)
+    assert report["resharded"] is True
+    assert tuple(r.engine.mesh.shape[a] for a in AXES) == (1, 2, 2)
+    err = max_err(r.engine.export_atoms((cf, ci)), ref_atoms)
+    assert err < 1e-4, err
+    record("device_loss", "recover", report, mesh_shape=[1, 2, 2],
+           max_err=err)
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    with open(out, "w") as fh:
+        for row in rows:
+            fh.write(json.dumps(row) + "\n")
+    print(f"wrote {out}: {len(rows)} scenarios")
+    print("check_faults OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""RA009 fixture: broad excepts that silently eat the error."""
+
+
+def load_checkpoint(path):
+    try:
+        return open(path, "rb").read()
+    except Exception:                     # RA009: swallowed, no record
+        return None
+
+
+def step_with_retry(fn, x):
+    try:
+        return fn(x)
+    except:                               # RA009: bare except, silent
+        x = None
+    return x
+
+
+def probe_backend(kernel, arg):
+    try:
+        return kernel(arg)
+    except (ValueError, BaseException):   # RA009: tuple hides a broad catch
+        return None

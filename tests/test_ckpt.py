@@ -50,6 +50,38 @@ def test_corruption_detected_and_skipped(tmp_path):
     assert mgr.latest_valid_step() == 1
 
 
+def test_restore_latest_skips_corrupt_shards(tmp_path):
+    """The resilience rollback path: with the newest shard truncated and
+    the next bit-flipped, ``restore_latest`` must fall back to the last
+    VERIFIED step and return its (step, tree) — never corrupt data."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    t1 = tree()
+    t2 = jax.tree.map(lambda a: a + 1, t1)
+    t3 = jax.tree.map(lambda a: a + 2, t1)
+    mgr.save(1, t1)
+    mgr.save(2, t2)
+    mgr.save(3, t3)
+
+    s3 = Path(tmp_path) / "step_0000000003" / "shard_0.npz"
+    s3.write_bytes(s3.read_bytes()[: s3.stat().st_size // 2])  # truncate
+    s2 = Path(tmp_path) / "step_0000000002" / "shard_0.npz"
+    data = bytearray(s2.read_bytes())
+    data[len(data) // 3] ^= 0x01                               # bit-flip
+    s2.write_bytes(bytes(data))
+
+    res = mgr.restore_latest(t1)
+    assert res is not None
+    step, out = res
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # every shard corrupt -> None (the runner raises its typed error)
+    s1 = Path(tmp_path) / "step_0000000001" / "shard_0.npz"
+    s1.write_bytes(b"")
+    assert mgr.restore_latest(t1) is None
+
+
 def test_partial_write_is_invisible(tmp_path):
     """A stale temp dir (crash mid-save) must not count as a checkpoint."""
     mgr = CheckpointManager(tmp_path, keep=3)

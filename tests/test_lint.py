@@ -1,4 +1,4 @@
-"""Golden-file tests for the JAX/Pallas hazard linter (RA001..RA008).
+"""Golden-file tests for the JAX/Pallas hazard linter (RA001..RA009).
 
 Each rule is proven by a failing ``tests/fixtures/lint/raXXX_bad.py``
 fixture and a clean ``raXXX_good.py`` counterpart; the repo's own
@@ -26,6 +26,7 @@ EXPECTED_BAD = {
     "RA006": 2,    # pmean over "ghost", axis_index over "phantom"
     "RA007": 2,    # .at[idx].add / .at[idx].max without mode=
     "RA008": 2,    # eng.simulate span / jit-bound call span, no sync
+    "RA009": 3,    # silent broad excepts: Exception / bare / tuple-hidden
 }
 
 

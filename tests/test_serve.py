@@ -11,6 +11,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
 from repro.parallel.sharding import ShardingCtx
+from repro.resilience import Watchdog, WaveTimeout
 from repro.runtime.serve_loop import BatchServer, Request, throughput_stats
 
 
@@ -44,6 +45,34 @@ def test_wave_serving_matches_stepwise_prefill(served):
             nxt = int(jnp.argmax(logits[0]))
             assert nxt == int(r.out_tokens[t]), (t, toks)
             toks.append(nxt)
+
+
+def test_wave_timeout_raises_typed_error(served):
+    """An impossible per-wave deadline turns the decode loop into a
+    typed WaveTimeout instead of a hung queue (the deadline is checked
+    against synced device work, not dispatch time)."""
+    cfg, model, params = served
+    rng = np.random.RandomState(2)
+    server = BatchServer(model, params, batch_size=1, max_len=32,
+                         wave_timeout_s=1e-9)
+    req = Request(prompt=rng.randint(0, cfg.vocab, size=(4,))
+                  .astype(np.int32), max_new_tokens=6)
+    with pytest.raises(WaveTimeout, match="decode steps"):
+        server.serve_wave([req])
+
+
+def test_generous_timeout_does_not_fire_and_watchdog_observes(served):
+    cfg, model, params = served
+    rng = np.random.RandomState(3)
+    wd = Watchdog()
+    server = BatchServer(model, params, batch_size=1, max_len=32,
+                         wave_timeout_s=600.0, watchdog=wd)
+    for _ in range(2):
+        req = Request(prompt=rng.randint(0, cfg.vocab, size=(4,))
+                      .astype(np.int32), max_new_tokens=3)
+        out = server.serve_wave([req])
+        assert out[0].out_tokens.shape == (3,)
+    assert wd.n == 2 and wd.events == 0      # one observation per wave
 
 
 def test_temperature_sampling_changes_output(served):
