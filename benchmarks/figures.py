@@ -388,6 +388,117 @@ def pipeline_bench(smoke: bool = False, out: str = None):
     emit("pipeline/cells", 0.0, str(len(cells)))
 
 
+def halo_wire_bench(smoke: bool = False, out: str = None):
+    """Compressed-wire suite: wire_dtype x backend cells ->
+    schema-versioned ``results/BENCH_halo_wire.json``.
+
+    Measured cells run ``md_worker.py --wire-dtype`` and record the
+    direction-aware byte accounting next to step latency (the MD system
+    is float32, so the named rev format compresses the force return
+    while coordinates ride the f32 floor: bf16 -> 4/3 bytes overall,
+    int8_ef -> ~1.6x).  A plan-level ``predicted`` table quantifies the
+    f64-payload case (coordinates drop to the f32 floor too: bf16 ->
+    8/3 ~ 2.7x) without paying for an x64 MD run.  The checked-in
+    baseline gates the byte columns exactly and latency at the usual
+    noise factor (``python -m repro.obs gate`` in CI perf-smoke).
+    """
+    from repro.obs import SCHEMA_VERSION, DEFAULT_GATE
+    from repro.launch.mesh import make_mesh
+
+    # (wire_dtype, backend, pipeline, depth) — None = dense baseline;
+    # the pipelined signal cells exercise the wire-dtyped slot ring
+    grid = [(None, "fused", "off", 2),
+            ("float32", "fused", "off", 2),
+            ("bfloat16", "fused", "off", 2),
+            ("float16", "fused", "off", 2),
+            ("int8_ef", "fused", "off", 2),
+            ("bfloat16", "signal", "double_buffer", 2),
+            ("int8_ef", "signal", "double_buffer", 3)]
+    cfgs = [(1, 600, 8)] if smoke else [(1, 600, 12), (8, 1800, 12)]
+    cells = []
+    for devices, n_atoms, steps in cfgs:
+        for wd, backend, mode, depth in grid:
+            tag = (f"halo_wire/{devices}dev/{backend}/{mode}/"
+                   f"{wd or 'dense'}")
+            extra = ["--wire-dtype", wd] if wd else []
+            try:
+                r = run_sub("md_worker.py", backend, str(n_atoms),
+                            str(steps), "--pipeline", mode,
+                            "--pipeline-depth", str(depth),
+                            "--force-backend", "sparse", *extra,
+                            devices=devices)
+            except RuntimeError as e:
+                emit(tag, -1, f"error={str(e)[:60]}")
+                continue
+            cells.append(r)
+            emit(tag, r["ms_per_step"] * 1e3,
+                 f"wire_bytes={r['wire_bytes']};"
+                 f"wire_reduction={r['wire_reduction']:.3f}")
+
+    # byte accounting must order by rev itemsize on the f32 payload:
+    # int8_ef > bf16 = f16 > f32 = dense = 1.0
+    red = {c["wire_dtype"]: c["wire_reduction"] for c in cells
+           if c["devices"] == cfgs[0][0]}
+    monotone = (red.get("int8_ef", 0) > red.get("bfloat16", 0)
+                >= red.get("float16", 0) > 1.0
+                and abs(red.get("float32", 1.0) - 1.0) < 1e-9
+                and abs(red.get(None, 1.0) - 1.0) < 1e-9)
+    emit("halo_wire/reduction_monotone_in_itemsize", 0.0, str(monotone))
+
+    # plan-level predictions for the f64-payload regime (the paper-scale
+    # claim: bf16 halves-and-then-some the exchanged bytes because the
+    # coordinate direction drops to the f32 floor as well)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    predicted = []
+    for dtype in ("float32", "float64"):
+        for wd in ("float32", "bfloat16", "float16", "int8_ef"):
+            plan = HaloPlan.build(
+                HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                         backend="fused", dtype=dtype, feature_elems=4,
+                         wire_dtype=wd), mesh)
+            st = plan.stats((8, 8, 8))
+            predicted.append({
+                "dtype": dtype, "wire_dtype": wd,
+                "wire_itemsize_fwd": st["wire_itemsize_fwd"],
+                "wire_itemsize_rev": st["wire_itemsize_rev"],
+                "wire_bytes": st["wire_bytes"],
+                "wire_reduction": round(st["wire_reduction"], 4),
+                "wire_speedup_fused": round(
+                    st["latency_wire"]["wire_speedup_fused"], 4),
+            })
+    pred64 = {p["wire_dtype"]: p["wire_reduction"] for p in predicted
+              if p["dtype"] == "float64"}
+    bf16_halves_f64 = pred64.get("bfloat16", 0) > 2.0
+    emit("halo_wire/bf16_f64_reduction", 0.0,
+         f"{pred64.get('bfloat16', 0):.2f}x (>2x={bf16_halves_f64})")
+
+    doc = {
+        "suite": "halo_wire",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": smoke,
+        "cells": cells,
+        "predicted": predicted,
+        "reduction_monotone_in_itemsize": monotone,
+        "bf16_f64_reduction_over_2x": bf16_halves_f64,
+        "gate": {
+            **DEFAULT_GATE,
+            # cells differ by wire format at a fixed backend: the wire
+            # column is part of the cell identity and the byte columns
+            # it determines are exact invariants of the code
+            "key_fields": ["mode", "wire_dtype", "pipeline",
+                           "pipeline_depth", "devices", "n_atoms"],
+            "exact": DEFAULT_GATE["exact"] + [
+                "wire_itemsize_fwd", "wire_itemsize_rev", "wire_bytes"],
+            "rel_tol": {**DEFAULT_GATE["rel_tol"],
+                        "wire_reduction": 1e-6},
+        },
+    }
+    path = Path(out) if out else RESULTS / "BENCH_halo_wire.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1))
+    emit("halo_wire/cells", 0.0, str(len(cells)))
+
+
 def resilience_bench(smoke: bool = False, out: str = None):
     """Fault-recovery suite: fault site x recovery mode cells ->
     schema-versioned ``results/BENCH_resilience.json``.
@@ -556,5 +667,6 @@ ALL = {
     "lm": lm_microbench,
     "nb": nb_bench,
     "pipeline": pipeline_bench,
+    "halo_wire": halo_wire_bench,
     "resilience": resilience_bench,
 }

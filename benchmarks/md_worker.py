@@ -7,6 +7,7 @@ Usage (positional args kept for benchmarks/figures.py compatibility):
       [--overlap-rebin] [--halo-width N]
       [--halo-pulses N] [--force-backend {dense,sparse,pallas}]
       [--safety F] [--nstprune N] [--inner-radius R]
+      [--wire-dtype {bfloat16,float16,int8_ef,float32}]
       [--out results/dryrun]
 
 Emits one JSON record with per-step timing plus the plan's overlap model
@@ -15,8 +16,8 @@ the alpha-beta latency model (``modeled_*``, for the modeled-vs-measured
 figures), and the force engine's evaluated-work accounting
 (``prune_ratio``, ``pairs_per_s``, the per-pair-bound tier ladders and
 the rolling-prune columns); with ``--out`` the record is also written to
-``<out>/md__<backend>__<n>__<pipeline>[__dD][__or][__wW][__pP][__fbB]
-[__sS][__npN].json``.
+``<out>/md__<backend>__<n>__<pipeline>[__dD][__or][__wW][__pP][__wdF]
+[__fbB][__sS][__npN].json``.
 """
 import argparse
 import json
@@ -56,6 +57,10 @@ def main():
     ap.add_argument("--inner-radius", type=float, default=None,
                     help="inner cutoff of the rolling prune (default: "
                          "r_cut + 3-sigma drift over nstprune steps)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=("bfloat16", "float16", "int8_ef", "float32"),
+                    help="compressed halo payload format (force-return "
+                         "direction; coordinates ride the f32 floor)")
     ap.add_argument("--out", default=None,
                     help="directory for the JSON record (e.g. "
                          "results/dryrun)")
@@ -82,6 +87,7 @@ def main():
                    capacity_safety=args.safety,
                    nstprune=args.nstprune,
                    inner_radius=args.inner_radius,
+                   wire_dtype=args.wire_dtype,
                    obs=reg, trace=args.trace)
 
     state, _, _ = eng.simulate(4, collect=False)         # compile + warmup
@@ -123,6 +129,12 @@ def main():
         "halo_bytes_index": stats["bytes_index"],
         "halo_useful_bytes": stats["useful_bytes"],
         "halo_occupancy": stats["occupancy"],
+        # compressed-wire accounting (HaloSpec.wire_dtype; None = dense)
+        "wire_dtype": args.wire_dtype,
+        "wire_itemsize_fwd": stats.get("wire_itemsize_fwd"),
+        "wire_itemsize_rev": stats.get("wire_itemsize_rev"),
+        "wire_bytes": stats.get("wire_bytes"),
+        "wire_reduction": stats.get("wire_reduction"),
         # per-step overlap model (the step-pipeline scaling story)
         "overlapped_bytes": overlap["overlapped_bytes_per_step"],
         "exposed_phases": overlap["exposed_phases_per_step"],
@@ -173,6 +185,8 @@ def main():
             name += f"__w{w}"
         if args.halo_pulses != 1:
             name += f"__p{args.halo_pulses}"
+        if args.wire_dtype:
+            name += f"__wd{args.wire_dtype}"
         if args.force_backend != "dense":
             name += f"__fb{args.force_backend}"
         if args.safety != 2.2:

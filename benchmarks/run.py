@@ -32,11 +32,14 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--suite", default=None,
-                    choices=("paper", "nb", "pipeline", "resilience"),
+                    choices=("paper", "nb", "pipeline", "halo_wire",
+                             "resilience"),
                     help="named suite: 'nb' = force-engine bench "
                          "(BENCH_nb.json), 'pipeline' = perf-trajectory "
                          "bench (BENCH_pipeline.json), 'resilience' = "
                          "fault-recovery bench (BENCH_resilience.json), "
+                         "'halo_wire' = compressed-wire bench "
+                         "(BENCH_halo_wire.json), "
                          "'paper' = all figures")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized suite variant (implies quick mode)")
@@ -44,13 +47,13 @@ def main() -> None:
                     help="override the pipeline suite's output file")
     args = ap.parse_args()
 
-    if args.suite in ("nb", "pipeline", "resilience"):
+    if args.suite in ("nb", "pipeline", "halo_wire", "resilience"):
         names = [args.suite]
     elif args.only:
         names = args.only.split(",")
     else:
         names = [n for n in ALL
-                 if n not in ("nb", "pipeline", "resilience")]
+                 if n not in ("nb", "pipeline", "halo_wire", "resilience")]
     print("name,us_per_call,derived")
     for name in names:
         fn = ALL[name]
@@ -58,7 +61,7 @@ def main() -> None:
         try:
             if name == "nb":
                 fn(smoke=args.smoke or not args.full)
-            elif name in ("pipeline", "resilience"):
+            elif name in ("pipeline", "halo_wire", "resilience"):
                 fn(smoke=args.smoke or not args.full, out=args.out)
             elif name in ("fig3", "fig6", "lm"):
                 fn(quick=not args.full)

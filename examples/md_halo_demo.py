@@ -7,7 +7,12 @@ scale: run with increasing virtual-device counts and compare step times.
     XLA_FLAGS=--xla_force_host_platform_device_count=$n \
         PYTHONPATH=src python examples/md_halo_demo.py
   done
+
+``--wire bfloat16`` additionally runs each backend with compressed halo
+payloads (see README "Compressed halo payloads") to show the wire-byte
+cut on top of the fused schedule.
 """
+import argparse
 import time
 
 import jax
@@ -16,18 +21,35 @@ from repro.core import HaloSpec
 from repro.core.md import MDEngine, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
-system = make_grappa_like(2400, seed=1)
-mesh = make_md_mesh()
-n_dev = len(jax.devices())
-print(f"{n_dev} devices -> DD grid {dict(mesh.shape)}")
 
-for backend in ("serialized", "fused"):
-    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
-                    backend=backend)
-    eng = MDEngine(system, mesh, spec)
-    state, _, _ = eng.simulate(4, collect=False)         # warmup + compile
-    t0 = time.time()
-    state, metrics, _ = eng.simulate(40, state=state)
-    dt = (time.time() - t0) / 40
-    print(f"{backend:11s}: {dt * 1e3:7.2f} ms/step "
-          f"({system.n_atoms / dt / 1e6:.2f} Matom-steps/s)")
+def main(n_atoms=2400, warmup=4, steps=40, wire_dtype=None):
+    system = make_grappa_like(n_atoms, seed=1)
+    mesh = make_md_mesh()
+    n_dev = len(jax.devices())
+    print(f"{n_dev} devices -> DD grid {dict(mesh.shape)}")
+
+    results = {}
+    for backend in ("serialized", "fused"):
+        spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                        backend=backend)
+        eng = MDEngine(system, mesh, spec, wire_dtype=wire_dtype)
+        state, _, _ = eng.simulate(warmup, collect=False)  # warmup+compile
+        t0 = time.time()
+        state, metrics, _ = eng.simulate(steps, state=state)
+        dt = (time.time() - t0) / steps
+        results[backend] = dt
+        wire = f" wire={wire_dtype}" if wire_dtype else ""
+        print(f"{backend:11s}{wire}: {dt * 1e3:7.2f} ms/step "
+              f"({system.n_atoms / dt / 1e6:.2f} Matom-steps/s)")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--atoms", type=int, default=2400)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--wire", default=None,
+                    help="wire_dtype for compressed halo payloads "
+                         "(e.g. bfloat16)")
+    a = ap.parse_args()
+    main(n_atoms=a.atoms, steps=a.steps, wire_dtype=a.wire)

@@ -15,38 +15,55 @@ from repro.core import HaloPlan, HaloSpec
 from repro.core.md import MDEngine, make_grappa_like
 from repro.launch.mesh import make_md_mesh
 
-# --- plan-based halo exchange on a dense grid -------------------------------
-mesh = make_md_mesh()                    # factors devices into (Z, Y, X)
-print(f"device mesh: {dict(mesh.shape)}")
-x = jnp.arange(float(np.prod([8 * mesh.shape['z'], 8, 4]))) \
-    .reshape(8 * mesh.shape["z"], 8, 4)
-plan = HaloPlan.build(HaloSpec(axis_names=("z",), widths=(2,),
-                               backend="fused"), mesh)
-ext = plan.fwd(x)
-print(f"halo exchange: {x.shape} -> {ext.shape} (per-dim +width*shards)")
-# plan.exchange is differentiable: its VJP is the fused force-return path
-grad = jax.grad(lambda a: jnp.sum(plan.exchange(a) ** 2))(x)
-print(f"grad through plan.exchange: {grad.shape} (fused reverse path)")
 
-# --- the MD reproduction ----------------------------------------------------
-system = make_grappa_like(1200, seed=0)
-print(f"grappa-like system: {system.n_atoms} atoms, box {system.box[0]:.2f}")
-for backend in ("serialized", "fused"):
-    spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
-                    backend=backend)
-    eng = MDEngine(system, mesh, spec)
-    _, metrics, _ = eng.simulate(20)
-    E = metrics["pe"] + metrics["ke"]
-    print(f"{backend:11s}: E0={E[0]:9.3f}  E20={E[-1]:9.3f}  "
-          f"drift/atom={(E.max() - E.min()) / system.n_atoms:.2e}")
+def main(n_atoms=1200, steps=20):
+    # --- plan-based halo exchange on a dense grid ---------------------------
+    mesh = make_md_mesh()                # factors devices into (Z, Y, X)
+    print(f"device mesh: {dict(mesh.shape)}")
+    x = jnp.arange(float(np.prod([8 * mesh.shape['z'], 8, 4]))) \
+        .reshape(8 * mesh.shape["z"], 8, 4)
+    plan = HaloPlan.build(HaloSpec(axis_names=("z",), widths=(2,),
+                                   backend="fused"), mesh)
+    ext = plan.fwd(x)
+    print(f"halo exchange: {x.shape} -> {ext.shape} (per-dim +width*shards)")
+    # plan.exchange is differentiable: its VJP is the fused force-return path
+    grad = jax.grad(lambda a: jnp.sum(plan.exchange(a) ** 2))(x)
+    print(f"grad through plan.exchange: {grad.shape} (fused reverse path)")
 
-# --- what the fused schedule buys (napkin math from the plan) ---------------
-md_plan = HaloPlan.build(
-    HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
-             dtype="float32", feature_elems=4), mesh)
-stats = md_plan.stats((8, 8, 8))
-print(f"total halo bytes:         {stats['total_bytes']}")
-print(f"serialized chained bytes: {stats['serialized_critical_bytes']}")
-print(f"fused chained bytes:      {stats['fused_critical_bytes']} "
-      f"({stats['fused_critical_bytes'] / stats['serialized_critical_bytes']:.0%})")
-print(f"dependent fraction:       {stats['dependent_fraction']:.3%}")
+    # --- the MD reproduction ------------------------------------------------
+    system = make_grappa_like(n_atoms, seed=0)
+    print(f"grappa-like system: {system.n_atoms} atoms, "
+          f"box {system.box[0]:.2f}")
+    for backend in ("serialized", "fused"):
+        spec = HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                        backend=backend)
+        eng = MDEngine(system, mesh, spec)
+        _, metrics, _ = eng.simulate(steps)
+        E = metrics["pe"] + metrics["ke"]
+        print(f"{backend:11s}: E0={E[0]:9.3f}  E{steps}={E[-1]:9.3f}  "
+              f"drift/atom={(E.max() - E.min()) / system.n_atoms:.2e}")
+
+    # --- what the fused schedule buys (napkin math from the plan) -----------
+    md_plan = HaloPlan.build(
+        HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                 dtype="float32", feature_elems=4), mesh)
+    stats = md_plan.stats((8, 8, 8))
+    print(f"total halo bytes:         {stats['total_bytes']}")
+    print(f"serialized chained bytes: {stats['serialized_critical_bytes']}")
+    print(f"fused chained bytes:      {stats['fused_critical_bytes']} "
+          f"({stats['fused_critical_bytes'] / stats['serialized_critical_bytes']:.0%})")
+    print(f"dependent fraction:       {stats['dependent_fraction']:.3%}")
+
+    # --- and what a compressed wire buys on top (HaloSpec.wire_dtype) -------
+    wire_plan = HaloPlan.build(
+        HaloSpec(axis_names=("z", "y", "x"), widths=(1, 1, 1),
+                 dtype="float32", feature_elems=4, wire_dtype="bfloat16"),
+        mesh)
+    ws = wire_plan.stats((8, 8, 8))
+    print(f"wire=bfloat16 bytes:      {ws['wire_bytes']} "
+          f"({ws['wire_reduction']:.2f}x fewer than dense both ways)")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -12,23 +12,30 @@ import jax.numpy as jnp
 from repro.launch.mesh import make_mesh
 from repro.parallel.context import ring_attention_sharded
 
-n = len(jax.devices())
-mesh = make_mesh((n,), ("seq",))
-rng = np.random.RandomState(0)
-B, L, H, hd = 2, 256 * n, 8, 64
-q = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
-k = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
-v = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
 
-outs = {}
-for mode in ("serialized", "fused"):
-    f = jax.jit(lambda q, k, v, m=mode: ring_attention_sharded(
-        q, k, v, mesh, "seq", causal=True, mode=m))
-    f(q, k, v).block_until_ready()          # compile
-    t0 = time.time()
-    for _ in range(10):
-        outs[mode] = f(q, k, v).block_until_ready()
-    print(f"{mode:11s}: {(time.time() - t0) / 10 * 1e3:.2f} ms "
-          f"(seq {L} over {n} shards)")
-err = float(jnp.abs(outs["fused"] - outs["serialized"]).max())
-print(f"fused == serialized: max |diff| = {err:.2e}")
+def main(seq_per_shard=256, iters=10, B=2, H=8, hd=64):
+    n = len(jax.devices())
+    mesh = make_mesh((n,), ("seq",))
+    rng = np.random.RandomState(0)
+    L = seq_per_shard * n
+    q = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, L, H, hd).astype(np.float32))
+
+    outs = {}
+    for mode in ("serialized", "fused"):
+        f = jax.jit(lambda q, k, v, m=mode: ring_attention_sharded(
+            q, k, v, mesh, "seq", causal=True, mode=m))
+        f(q, k, v).block_until_ready()      # compile
+        t0 = time.time()
+        for _ in range(iters):
+            outs[mode] = f(q, k, v).block_until_ready()
+        print(f"{mode:11s}: {(time.time() - t0) / iters * 1e3:.2f} ms "
+              f"(seq {L} over {n} shards)")
+    err = float(jnp.abs(outs["fused"] - outs["serialized"]).max())
+    print(f"fused == serialized: max |diff| = {err:.2e}")
+    return err
+
+
+if __name__ == "__main__":
+    main()

@@ -11,19 +11,27 @@ from repro.models import build_model
 from repro.parallel.sharding import ShardingCtx
 from repro.runtime.serve_loop import BatchServer, Request, throughput_stats
 
-cfg = get_config("qwen3-1.7b").reduce()
-mesh = make_mesh((1, 1), ("data", "model"))
-ctx = ShardingCtx(mesh=mesh, batch_axes=("data",))
-model = build_model(cfg, ctx)
-params = model.init(jax.random.PRNGKey(0))
-server = BatchServer(model, params, batch_size=4, max_len=64)
 
-rng = np.random.RandomState(0)
-reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=(10,))
-                .astype(np.int32), max_new_tokens=12) for _ in range(8)]
-done = []
-while reqs:
-    wave, reqs = reqs[:4], reqs[4:]
-    done += server.serve_wave(wave)
-    print(throughput_stats(done))
-print("sample continuation:", done[0].out_tokens.tolist())
+def main(n_requests=8, batch_size=4, max_new_tokens=12):
+    cfg = get_config("qwen3-1.7b").reduce()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = ShardingCtx(mesh=mesh, batch_axes=("data",))
+    model = build_model(cfg, ctx)
+    params = model.init(jax.random.PRNGKey(0))
+    server = BatchServer(model, params, batch_size=batch_size, max_len=64)
+
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=(10,))
+                    .astype(np.int32), max_new_tokens=max_new_tokens)
+            for _ in range(n_requests)]
+    done = []
+    while reqs:
+        wave, reqs = reqs[:batch_size], reqs[batch_size:]
+        done += server.serve_wave(wave)
+        print(throughput_stats(done))
+    print("sample continuation:", done[0].out_tokens.tolist())
+    return done
+
+
+if __name__ == "__main__":
+    main()

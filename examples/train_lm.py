@@ -19,29 +19,38 @@ from repro.launch.steps import make_ctx, make_train_step
 from repro.optim import adamw
 from repro.runtime.train_loop import TrainLoopConfig, run_training
 
-full = "--full-100m" in sys.argv
-cfg = get_config("qwen3-1.7b")
-if full:
-    cfg = dataclasses.replace(cfg, n_layers=8, d_model=768, n_heads=8,
-                              n_kv_heads=4, head_dim=96, d_ff=2048,
-                              vocab=32000, remat=False,
-                              compute_dtype="float32",
-                              name="qwen3-100m")
-else:
-    cfg = cfg.reduce()
-shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
-mesh = make_mesh((1, 1), ("data", "model"))
-ctx = make_ctx(cfg, shape, mesh, fsdp=False)
-prog = make_train_step(cfg, shape, ctx,
-                       ocfg=adamw.AdamWConfig(lr=5e-3, warmup_steps=10,
-                                              total_steps=300),
-                       microbatches=1, donate=False)
-data = DataConfig(vocab=min(cfg.vocab, 512), seq_len=64, global_batch=8,
-                  seed=0, copy_period=2)
-with tempfile.TemporaryDirectory() as d:
-    loop = TrainLoopConfig(total_steps=120 if not full else 300,
-                           ckpt_dir=d, ckpt_every=40, log_every=10)
-    model = prog.model
-    params, opt, hist = run_training(
-        loop, prog, data, lambda: model.init(jax.random.PRNGKey(0)))
-print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+def main(full=False, total_steps=None):
+    cfg = get_config("qwen3-1.7b")
+    if full:
+        cfg = dataclasses.replace(cfg, n_layers=8, d_model=768, n_heads=8,
+                                  n_kv_heads=4, head_dim=96, d_ff=2048,
+                                  vocab=32000, remat=False,
+                                  compute_dtype="float32",
+                                  name="qwen3-100m")
+    else:
+        cfg = cfg.reduce()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                global_batch=8)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = make_ctx(cfg, shape, mesh, fsdp=False)
+    prog = make_train_step(cfg, shape, ctx,
+                           ocfg=adamw.AdamWConfig(lr=5e-3, warmup_steps=10,
+                                                  total_steps=300),
+                           microbatches=1, donate=False)
+    data = DataConfig(vocab=min(cfg.vocab, 512), seq_len=64,
+                      global_batch=8, seed=0, copy_period=2)
+    if total_steps is None:
+        total_steps = 300 if full else 120
+    with tempfile.TemporaryDirectory() as d:
+        loop = TrainLoopConfig(total_steps=total_steps, ckpt_dir=d,
+                               ckpt_every=40, log_every=10)
+        model = prog.model
+        params, opt, hist = run_training(
+            loop, prog, data, lambda: model.init(jax.random.PRNGKey(0)))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    return hist
+
+
+if __name__ == "__main__":
+    main(full="--full-100m" in sys.argv)

@@ -49,6 +49,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map_norep
 from repro.core import halo as _halo
+from repro.core import wire as _wire
 from repro.core.schedule import PulseSchedule, make_schedule
 
 Region = Tuple[int, ...]
@@ -72,6 +73,20 @@ class HaloSpec:
     default byte accounting in :meth:`HaloPlan.stats`.  ``pulses`` is the
     per-dim pulse count (GROMACS' two-pulse case splits a dim's halo across
     two staged pulses); ``None`` means one pulse per dim.
+
+    ``wire_dtype`` compresses the exchanged payload on the wire
+    (``None`` = dense; ``"float32"`` / ``"bfloat16"`` / ``"float16"`` =
+    cast, ``"int8_ef"`` = error-feedback int8; see
+    :mod:`repro.core.wire` for the measured rationale).  Compression is
+    direction-asymmetric: the coordinate (forward) exchange has a
+    float32 floor — f64 payloads ship f32 coordinates, f32 ships dense —
+    while the named format compresses the force-return (reverse)
+    exchange, whose quantization error integrates as zero-mean noise.
+    Payloads are quantized before send and dequantized after receive,
+    the local body never crosses the wire and stays exact, and integer
+    payloads (the MD engine's ``cell_i`` index exchange) always ride
+    dense.  Plan build rejects formats whose measured NVE drift exceeds
+    the dense-f32 bound (:func:`repro.core.wire.gate_wire_config`).
     """
 
     axis_names: Tuple[str, ...]
@@ -82,8 +97,14 @@ class HaloSpec:
     feature_elems: int = 1
     interpret: bool = True   # pallas backend: interpreter mode (CPU/tests)
     pulses: Optional[Tuple[int, ...]] = None
+    wire_dtype: Optional[str] = None
 
     def __post_init__(self):
+        if self.wire_dtype is not None and \
+                self.wire_dtype not in _wire.WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {self.wire_dtype!r}; "
+                f"available: {_wire.WIRE_DTYPES} or None")
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
         object.__setattr__(self, "widths",
                            tuple(int(w) for w in self.widths))
@@ -202,16 +223,23 @@ class PallasBackend(HaloBackend):
 
     # -- kernel dispatch with oracle fallback ------------------------------
 
-    def _pack(self, plan, src2d: jnp.ndarray, idx: np.ndarray) -> jnp.ndarray:
+    def _pack(self, plan, src2d: jnp.ndarray, idx: np.ndarray,
+              wire: Optional[str] = None) -> jnp.ndarray:
+        """Pack rows into the send buffer, optionally quantizing into the
+        wire dtype inside the kernel (fused quantize-into-pack: the wire
+        format never materializes in HBM — only the packed send buffer
+        and the received rows are wire-dtyped)."""
         jidx = jnp.asarray(idx)
         if not plan._pallas_broken:
             try:
                 from repro.kernels import halo_pack
                 return halo_pack.pack(src2d, jidx,
-                                      interpret=plan.spec.interpret)
+                                      interpret=plan.spec.interpret,
+                                      wire_dtype=wire)
             except Exception as e:  # pragma: no cover - backend-specific
                 _latch_halo_fallback(plan, e, "pack failed")
-        return jnp.take(src2d, jidx, axis=0)
+        rows = jnp.take(src2d, jidx, axis=0)
+        return rows if wire is None else rows.astype(jnp.dtype(wire))
 
     def _unpack_add(self, plan, dst2d: jnp.ndarray, idx: np.ndarray,
                     rows: jnp.ndarray) -> jnp.ndarray:
@@ -271,6 +299,12 @@ class PallasBackend(HaloBackend):
         nd = plan.spec.ndim
         local_shape = tuple(local.shape[:nd])
         fwd_maps, _ = self._maps(plan, local_shape)
+        # the coordinate direction's f32 floor ships f32 send buffers for
+        # wide payloads (pack casts, receive side casts back before the
+        # wrap shift); the payload is already wire-gridded at the plan
+        # seam so the cast is exact and results stay bitwise-identical
+        # to the serialized reference
+        wire = plan.wire_pack_dtype(local.dtype)
         ext = local
         for pulse, idx in zip(sched.serialized_order(), fwd_maps):
             if idx is None:
@@ -278,9 +312,10 @@ class PallasBackend(HaloBackend):
             d, w = pulse.dim, pulse.width
             shape = ext.shape
             src2d = ext.reshape(math.prod(shape[:d + 1]), -1)
-            slab = self._pack(plan, src2d, idx).reshape(
+            slab = self._pack(plan, src2d, idx, wire).reshape(
                 shape[:d] + (w,) + shape[d + 1:])
             recv = lax.ppermute(slab, sched.axis_names[d], plan.fwd_perms[d])
+            recv = recv.astype(local.dtype)       # dequantize-after-receive
             recv = shifter(recv, d)
             ext = jnp.concatenate([ext, recv], axis=d)
         return ext
@@ -358,15 +393,25 @@ def compute_exchange_stats(sched: PulseSchedule,
     The serialized design chains every pulse's full (forwarding-inclusive)
     slab, so its critical path *is* the total; the fused design overlaps
     each phase's transfers, chaining only ``max`` bytes per phase.
+
+    ``exchanged_cells`` is the exchanged region volume in *cells* — the
+    payload-independent first-class quantity every byte field is derived
+    from (``total_bytes = exchanged_cells * feature_elems * itemsize``).
+    Callers accounting side-channel payloads with different itemsizes
+    (index exchanges, wire formats) must scale from ``exchanged_cells``,
+    never back-derive volume from a byte total.
     """
     ndim = sched.ndim
     widths = sched.widths
 
-    def vol(region: Region) -> int:
+    def vol_cells(region: Region) -> int:
         v = 1
         for d in range(ndim):
             v *= widths[d] if d in region else local_shape[d]
-        return v * feature_elems * itemsize
+        return v
+
+    def vol(region: Region) -> int:
+        return vol_cells(region) * feature_elems * itemsize
 
     ser_pulse_bytes = []
     shape = list(local_shape)
@@ -386,9 +431,13 @@ def compute_exchange_stats(sched: PulseSchedule,
             "phase_critical_bytes": max((vol(r) for r in phase), default=0),
         })
 
+    cells = sum(vol_cells(r) for phase in sched.forward_phases()
+                for r in phase)
     total = sum(p["phase_bytes"] for p in fused_phases)
+    assert total == cells * feature_elems * itemsize
     assert total == sum(ser_pulse_bytes), "slab/region accounting mismatch"
     return {
+        "exchanged_cells": cells,
         "total_bytes": total,
         "serialized_pulse_bytes": ser_pulse_bytes,
         # fully sequential: the chained bytes are all of them
@@ -498,7 +547,7 @@ class HaloPlan:
     :meth:`rev_local` (inside an enclosing ``shard_map``).
     """
 
-    def __init__(self, spec: HaloSpec, mesh: Mesh):
+    def __init__(self, spec: HaloSpec, mesh: Mesh, verify: str = "error"):
         for a in spec.axis_names:
             if a not in mesh.shape:
                 raise ValueError(f"mesh has no axis {a!r}; "
@@ -506,7 +555,12 @@ class HaloPlan:
         self.spec = spec
         self.mesh = mesh
         self.backend = get_backend(spec.backend)
-        # config check first: nonsense (widths, pulses) combinations fail
+        # wire-format acceptance gate first: a compressed-payload config
+        # whose measured NVE drift exceeds the dense-f32 bound is rejected
+        # here (verify="warn"/"off" is the PR 6 escape-hatch convention)
+        self.wire = _wire.make_codec(spec.wire_dtype)
+        self.wire_drift = _wire.gate_wire_config(spec.wire_dtype, verify)
+        # config check next: nonsense (widths, pulses) combinations fail
         # here with an actionable message instead of deep in tracing
         from repro.analysis.schedule_verifier import check_halo_config
         self.sched: PulseSchedule = check_halo_config(
@@ -526,8 +580,9 @@ class HaloPlan:
     # -- construction ------------------------------------------------------
 
     @classmethod
-    def build(cls, spec: HaloSpec, mesh: Mesh) -> "HaloPlan":
-        return cls(spec, mesh)
+    def build(cls, spec: HaloSpec, mesh: Mesh,
+              verify: str = "error") -> "HaloPlan":
+        return cls(spec, mesh, verify=verify)
 
     # -- introspection -----------------------------------------------------
 
@@ -587,15 +642,65 @@ class HaloPlan:
         if key not in self._stats_cache:
             stats = dict(compute_exchange_stats(
                 self.sched, tuple(local_shape), itemsize, feature_elems))
-            # exchanged region volume in cells (payload-independent)
-            cells = stats["total_bytes"] // max(feature_elems * itemsize, 1)
+            # every byte field derives from the first-class exchanged
+            # region volume in cells — NOT back-derived from total_bytes,
+            # which silently mis-scales once payload and index itemsizes
+            # diverge (e.g. feature_elems=0 index-only accounting, or
+            # wire formats whose itemsize differs from the payload's)
+            cells = stats["exchanged_cells"]
             stats["bytes_index"] = cells * index_elems * index_itemsize
             stats["occupancy"] = occupancy
             stats["useful_bytes"] = (
                 None if occupancy is None
                 else int(round(stats["total_bytes"] * occupancy)))
+            # wire-format accounting, per direction: coordinates (fwd)
+            # ride at the float32 floor, the force return (rev) at the
+            # named format (int8 adds one 4-byte scale per serialized
+            # message).  ``wire_bytes`` covers BOTH directions of one
+            # step against ``2 * total_bytes`` dense.
+            wire = self.wire
+            stats["wire_dtype"] = self.spec.wire_dtype
+            stats["wire_itemsize_fwd"] = (
+                itemsize if wire is None
+                else wire.fwd_itemsize(self.spec.dtype))
+            stats["wire_itemsize_rev"] = (itemsize if wire is None
+                                          else wire.wire_itemsize)
+            stats["wire_itemsize"] = stats["wire_itemsize_rev"]
+            n_msgs = len([b for b in stats["serialized_pulse_bytes"]
+                          if b > 0])
+            scale_overhead = (0 if wire is None or wire.is_float
+                              else 4 * n_msgs)
+            stats["wire_bytes_fwd"] = (cells * feature_elems
+                                       * stats["wire_itemsize_fwd"])
+            stats["wire_bytes_rev"] = (cells * feature_elems
+                                       * stats["wire_itemsize_rev"]
+                                       + scale_overhead)
+            stats["wire_bytes"] = (stats["wire_bytes_fwd"]
+                                   + stats["wire_bytes_rev"])
+            stats["wire_reduction"] = (
+                2 * stats["total_bytes"] / stats["wire_bytes"]
+                if stats["wire_bytes"] else 1.0)
             stats["latency"] = latency_model(stats, link_latency_s,
                                              bandwidth_Bps)
+            if wire is not None:
+                # the predicted win: the same alpha-beta model at the
+                # per-direction mean wire itemsize — latency terms
+                # unchanged, bandwidth terms scaled by the byte cut
+                mean_itemsize = (stats["wire_itemsize_fwd"]
+                                 + stats["wire_itemsize_rev"]) / 2
+                wstats = compute_exchange_stats(
+                    self.sched, tuple(local_shape),
+                    mean_itemsize, feature_elems)
+                lat_w = latency_model(wstats, link_latency_s,
+                                      bandwidth_Bps)
+                lat_w["wire_speedup_fused"] = (
+                    stats["latency"]["fused_time_s"] / lat_w["fused_time_s"]
+                    if lat_w["fused_time_s"] else 1.0)
+                lat_w["wire_speedup_serialized"] = (
+                    stats["latency"]["serialized_time_s"]
+                    / lat_w["serialized_time_s"]
+                    if lat_w["serialized_time_s"] else 1.0)
+                stats["latency_wire"] = lat_w
             overlap = overlap_model(stats, self.backend.critical_path,
                                     pipeline, depth)
             stats["overlap"] = overlap
@@ -631,14 +736,104 @@ class HaloPlan:
             return None
         return jnp.asarray(wrap_shift)
 
+    def _wire_active(self, x: jnp.ndarray) -> bool:
+        """Wire compression applies to floating payloads only: integer
+        side channels (the MD engine's ``cell_i`` exchange) ride dense."""
+        return self.wire is not None and \
+            jnp.issubdtype(x.dtype, jnp.floating)
+
+    def wire_pack_dtype(self, dtype) -> Optional[str]:
+        """Wire dtype for fused quantize-into-pack kernels on the
+        coordinate (forward) direction: the float32 floor — f64 payloads
+        pack/put f32 rows, narrower payloads pack dense.  (The named
+        format compresses only the force-return direction, whose
+        accumulated sums the kernels never re-round.)"""
+        if self.wire is None:
+            return None
+        if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+            return None
+        return self.wire.fwd_wire_dtype(dtype)
+
+    def _body_idx(self, local_shape: Sequence[int]) -> Tuple[slice, ...]:
+        """Index of the local body inside an extended block (halos are
+        appended at the high end of each decomposed dim)."""
+        return tuple(slice(0, int(n)) for n in local_shape)
+
     def fwd_local(self, local: jnp.ndarray, wrap_shift=_UNSET) -> jnp.ndarray:
-        """Coordinate exchange on one device's block (needs shard_map)."""
+        """Coordinate exchange on one device's block (needs shard_map).
+
+        With ``spec.wire_dtype`` set the payload is wire-gridded at the
+        coordinate direction's float32 floor before the sends and the
+        exact local body spliced back afterwards: received halo data is
+        wire-lossy, local data never is.  Payloads already at or below
+        the floor ride dense (the coordinate cast would be an identity).
+        """
         shift = self._resolve_shift(wrap_shift)
-        return self.backend.fwd(self, local, shift)
+        if not self._wire_active(local) or \
+                self.wire.fwd_wire_dtype(local.dtype) is None:
+            return self.backend.fwd(self, local, shift)
+        q = self.wire.fwd_roundtrip(local)
+        ext = self.backend.fwd(self, q, shift)
+        body = self._body_idx(local.shape[:self.spec.ndim])
+        return ext.at[body].set(local)
 
     def rev_local(self, ext: jnp.ndarray) -> jnp.ndarray:
-        """Force-return exchange on one device's extended block."""
+        """Force-return exchange on one device's extended block.
+
+        The adjoint direction compresses symmetrically: halo-region force
+        contributions are wire-quantized before the return puts, the body
+        (never transmitted) stays exact.
+        """
+        if not self._wire_active(ext):
+            return self.backend.rev(self, ext)
+        return self.backend.rev(self, self._rev_wire(ext, None)[0])
+
+    def rev_local_ef(self, ext: jnp.ndarray, ef: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """:meth:`rev_local` with error-feedback state (ext-shaped)."""
+        q, new_ef = self._rev_wire(ext, ef)
+        return self.backend.rev(self, q), new_ef
+
+    def rev_local_raw(self, ext: jnp.ndarray) -> jnp.ndarray:
+        """Reverse exchange with NO wire seam — for callers that already
+        hold a wire-gridded extended buffer (the pipeline's slot ring
+        decodes at drain time; re-quantizing would double-apply EF)."""
         return self.backend.rev(self, ext)
+
+    def _rev_wire(self, ext, ef):
+        q, new_ef = self.wire.roundtrip(ext, ef)
+        body = self._body_idx(tuple(
+            ext.shape[d] - self.spec.widths[d]
+            for d in range(self.spec.ndim)))
+        return q.at[body].set(ext[body]), new_ef
+
+    # -- wire-format slot-ring codec (pipeline extended-force buffers) -----
+
+    def wire_encode_ext(self, F_ext: jnp.ndarray,
+                        ef: Optional[jnp.ndarray] = None):
+        """Encode an extended-force buffer into wire-format ring parts.
+
+        Returns ``(parts, new_ef)`` where ``parts`` is a tuple of arrays
+        to store in the pipeline's slot ring: the wire-dtyped buffer
+        (+ scale for int8) plus the exact f32/f64 body — so in-flight
+        force windows are HBM-resident in wire format while the local
+        body keeps full precision.  ``wire_decode_ext`` inverts it; the
+        composition equals :meth:`_rev_wire`'s quantize-and-splice
+        bitwise, which keeps ``off`` == ``double_buffer`` conformance.
+        """
+        parts, new_ef = self.wire.encode(F_ext, ef)
+        body = self._body_idx(tuple(
+            F_ext.shape[d] - self.spec.widths[d]
+            for d in range(self.spec.ndim)))
+        return parts + (F_ext[body],), new_ef
+
+    def wire_decode_ext(self, parts, dtype) -> jnp.ndarray:
+        """Decode slot-ring parts back to the wire-gridded extended-force
+        buffer with the exact body spliced in (drain side)."""
+        wire_parts, bodyv = parts[:-1], parts[-1]
+        F = self.wire.decode(wire_parts, dtype)
+        body = self._body_idx(bodyv.shape[:self.spec.ndim])
+        return F.at[body].set(bodyv)
 
     # -- global execution (plan applies the shard_map) ---------------------
 
@@ -655,11 +850,11 @@ class HaloPlan:
         grows by ``size_d * w_d`` per dim).
         """
         shift = self._resolve_shift(wrap_shift)
-        return self._shard(lambda lo: self.backend.fwd(self, lo, shift))(x)
+        return self._shard(lambda lo: self.fwd_local(lo, shift))(x)
 
     def rev(self, ext: jax.Array) -> jax.Array:
         """Shard-mapped force-return exchange (adjoint of :meth:`fwd`)."""
-        return self._shard(lambda e: self.backend.rev(self, e))(ext)
+        return self._shard(lambda e: self.rev_local(e))(ext)
 
     def exchange(self, x: jax.Array) -> jax.Array:
         """Differentiable exchange: the VJP *is* the reverse exchange.

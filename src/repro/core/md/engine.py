@@ -146,6 +146,7 @@ class MDEngine:
                  inner_radius: float | None = None,
                  inner_safety: float = 1.5,
                  pair_bucket: int = PAIR_BUCKET,
+                 wire_dtype: str | None = None,
                  verify: str = "error",
                  obs=None, trace: bool = False,
                  inject: bool = False, health: bool = False):
@@ -192,8 +193,8 @@ class MDEngine:
             overlap_rebin=overlap_rebin, force_backend=force_backend,
             capacity_safety=capacity_safety, nstprune=nstprune,
             inner_radius=inner_radius, inner_safety=inner_safety,
-            pair_bucket=pair_bucket, verify=verify, obs=obs, trace=trace,
-            inject=inject, health=health)
+            pair_bucket=pair_bucket, wire_dtype=wire_dtype, verify=verify,
+            obs=obs, trace=trace, inject=inject, health=health)
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
@@ -272,11 +273,18 @@ class MDEngine:
             spec = spec.with_wrap_shift(ws)
         # feature layout for byte accounting: each exchanged cell carries
         # `capacity` atom slots of 4 floats (x, y, z, charge); the (K, 2)
-        # int32 cell_i exchange is excluded from the canonical stats
+        # int32 cell_i exchange is excluded from the canonical stats.
+        # ``wire_dtype`` compresses the floating payload on the wire
+        # (cell_i always rides dense); plan build runs the drift gate
+        # with this engine's verify mode, so an over-aggressive wire
+        # format is rejected here unless explicitly waived.
+        if wire_dtype is not None:
+            spec = dataclasses.replace(spec, wire_dtype=wire_dtype)
+        self.wire_dtype = spec.wire_dtype
         self.plan = HaloPlan.build(
             dataclasses.replace(spec, dtype=np.dtype(dt).name,
                                 feature_elems=4 * self.layout.capacity),
-            mesh)
+            mesh, verify=verify)
         self._spec = P(*AXES)
         # build-time gate: config sanity (nstprune vs block length, list
         # radii, pool/capacity factors) plus a static replay of the comm

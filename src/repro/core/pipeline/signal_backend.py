@@ -65,8 +65,14 @@ class SignalBackend(PallasBackend):
         return axes is not None and len(axes) <= 1
 
     def _put_rows(self, plan, src2d: jnp.ndarray, idx: np.ndarray, d: int,
-                  shift: int) -> jnp.ndarray:
-        """One put-with-signal pulse on packed rows; returns received rows."""
+                  shift: int, wire=None) -> jnp.ndarray:
+        """One put-with-signal pulse on packed rows; returns received rows.
+
+        ``wire`` (an fp wire dtype name) fuses quantize-into-pack: the
+        VMEM scratch and the remote put are wire-dtyped, so the wire
+        format never materializes in HBM — only the received buffer is,
+        and the caller casts it back on acquire.
+        """
         axis = plan.sched.axis_names[d]
         ring = plan.axis_sizes[d]
         jidx = jnp.asarray(idx)
@@ -75,10 +81,13 @@ class SignalBackend(PallasBackend):
                 from repro.kernels import halo_pack
                 return halo_pack.put_signal(src2d, jidx, axis=axis,
                                             ring=ring, shift=shift,
-                                            interpret=plan.spec.interpret)
+                                            interpret=plan.spec.interpret,
+                                            wire_dtype=wire)
             except Exception as e:  # pragma: no cover - backend-specific
                 _latch_halo_fallback(plan, e, "put_signal failed")
         rows = jnp.take(src2d, jidx, axis=0)
+        if wire is not None:
+            rows = rows.astype(jnp.dtype(wire))
         perm = (_halo._perm_fwd(ring) if shift == -1
                 else _halo._perm_rev(ring))
         return lax.ppermute(rows, axis, perm)
@@ -160,6 +169,14 @@ class SignalBackend(PallasBackend):
                                  wrap_shift)
         nd = plan.spec.ndim
         ext = local
+        # single-pulse dims ship put_signal buffers at the coordinate
+        # direction's f32 floor (the payload is pre-gridded at the plan
+        # seam so the cast is exact); multi-pulse staged forwarding stays
+        # dense — the
+        # fused kernel forwards received rows without an intermediate
+        # decode, which only matches the serialized reference bitwise
+        # when no per-hop re-rounding is involved
+        wire = plan.wire_pack_dtype(local.dtype)
         per_dim = self._dim_fwd_maps(plan, tuple(local.shape[:nd]))
         for d in range(nd):
             if per_dim[d] is None:
@@ -170,11 +187,12 @@ class SignalBackend(PallasBackend):
             src2d = ext.reshape(math.prod(shape[:d + 1]), -1)
             if len(pulses) == 1:
                 recvs = [self._put_rows(plan, src2d, padded[0][:counts[0]],
-                                        d, shift=-1)]
+                                        d, shift=-1, wire=wire)]
             else:
                 out = self._fused_dim(plan, src2d, padded, d)
                 recvs = [out[k, :counts[k]] for k in range(len(pulses))]
             for pulse, rows in zip(pulses, recvs):
+                rows = rows.astype(ext.dtype)    # dequantize-after-receive
                 slab = rows.reshape(shape[:d] + (pulse.width,)
                                     + shape[d + 1:])
                 ext = jnp.concatenate([ext, shifter(slab, d)], axis=d)

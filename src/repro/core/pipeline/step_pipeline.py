@@ -45,6 +45,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -189,6 +190,103 @@ class StepPipeline:
         with sc("rev_acquire"):
             return lax.optimization_barrier(f)
 
+    # -- wire-format variants (spec.wire_dtype; see repro.core.wire) -------
+    # Only the force-return direction carries the named wire format (and
+    # its EF state for int8_ef); the coordinate direction's float32 floor
+    # is applied inside ``plan.fwd_local`` itself, so ``_fwd`` needs no
+    # wire variant.
+
+    def _rev_ef(self, F_ext, ef):
+        """:meth:`_rev` threading int8_ef error-feedback state."""
+        sc = self.tracer.scope
+        with sc("rev_release"):
+            F_ext, ef = lax.optimization_barrier((F_ext, ef))
+        with sc("rev_return"):
+            f, ef = self.plan.rev_local_ef(F_ext, ef)
+        with sc("rev_acquire"):
+            return lax.optimization_barrier((f, ef))
+
+    def _rev_raw(self, F_ext):
+        """:meth:`_rev` for an already wire-gridded buffer (slot-ring
+        drain: the fill encoded it, so re-quantizing here would
+        double-apply error feedback and re-round the halo rows)."""
+        sc = self.tracer.scope
+        with sc("rev_release"):
+            F_ext = lax.optimization_barrier(F_ext)
+        with sc("rev_return"):
+            f = self.plan.rev_local_raw(F_ext)
+        with sc("rev_acquire"):
+            return lax.optimization_barrier(f)
+
+    def _wire_state(self, state, f0, ctx):
+        """``(wire_on, wef0)``: does this program use the wire slot-ring/
+        error-feedback machinery, and the initial rev-direction EF array
+        (None for stateless formats — only int8_ef carries state, and
+        only on the force return; coordinates never get feedback).
+
+        Shapes come from ``jax.eval_shape`` over the engine callbacks
+        (``begin`` emits the exchange payload, ``force`` the extended
+        force buffer) — both are device-local and collective-free, so
+        abstract evaluation is safe inside the enclosing shard_map.
+        When ``wire_dtype`` is None this returns ``(False, None)`` and
+        every wire branch below is dead python, keeping the dense trace
+        operand-for-operand identical to the pre-wire program.
+        """
+        plan, fns = self.plan, self.fns
+        if plan.wire is None:
+            return False, None
+        pay = jax.eval_shape(lambda s, f: fns.begin(s, f, ctx),
+                             state, f0)[2]
+        if not jnp.issubdtype(pay.dtype, jnp.floating):
+            return False, None
+        if not plan.wire.stateful:
+            return True, None
+        ext = jax.ShapeDtypeStruct(plan.extended_shape(pay.shape),
+                                   pay.dtype)
+        F_ext = jax.eval_shape(lambda e: fns.force(e, ctx), ext)[0]
+        return True, jnp.zeros(F_ext.shape, F_ext.dtype)
+
+    # -- wire-dtyped slot rings (in-flight force windows stay compressed) --
+
+    def _slot_ring(self, F0, ef, wire_on):
+        """Allocate the depth-slot ring and fill slot 0 (prologue).
+
+        Dense mode keeps the single (depth, ...) buffer; with a wire
+        format each slot holds the encode parts (wire-dtyped buffer,
+        + scale for int8, + the exact-precision body) as a tuple of
+        rings, so HBM-resident in-flight windows shrink with the wire.
+        """
+        depth = self.depth
+        if not wire_on:
+            slots = jnp.zeros((depth,) + F0.shape, F0.dtype)
+            return lax.dynamic_update_index_in_dim(slots, F0, 0, 0), ef
+        parts, ef = self.plan.wire_encode_ext(F0, ef)
+        slots = tuple(jnp.zeros((depth,) + p.shape, p.dtype)
+                      for p in parts)
+        slots = tuple(lax.dynamic_update_index_in_dim(s, p, 0, 0)
+                      for s, p in zip(slots, parts))
+        return slots, ef
+
+    def _slot_fill(self, slots, F_ext, ef, cur, wire_on):
+        """Write step ``cur % depth``'s force buffer (encoding it when a
+        wire format is active; error feedback updates at fill time, the
+        same once-per-step cadence as serial mode's rev quantization)."""
+        if not wire_on:
+            return lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0), ef
+        parts, ef = self.plan.wire_encode_ext(F_ext, ef)
+        slots = tuple(lax.dynamic_update_index_in_dim(s, p, cur, 0)
+                      for s, p in zip(slots, parts))
+        return slots, ef
+
+    def _slot_drain(self, slots, idx, f_dtype, wire_on):
+        """Read a slot back as a dense extended-force buffer (decode +
+        exact-body splice when a wire format is active)."""
+        if not wire_on:
+            return lax.dynamic_index_in_dim(slots, idx, 0, keepdims=False)
+        parts = tuple(lax.dynamic_index_in_dim(s, idx, 0, keepdims=False)
+                      for s in slots)
+        return self.plan.wire_decode_ext(parts, f_dtype)
+
     # -- fault injection (traced; every helper is behind ``self.inject``) --
 
     def _fire(self, ctx, k, site):
@@ -223,9 +321,14 @@ class StepPipeline:
 
     def _run_serial(self, state, f0, n_steps, ctx):
         fns, ledger, sc = self.fns, self.ledger, self.tracer.scope
+        _, wef0 = self._wire_state(state, f0, ctx)
+        stateful = wef0 is not None   # int8_ef: EF rides the scan carry
 
         def step(carry, k):
-            state, f, led = carry
+            if stateful:
+                state, f, wef, led = carry
+            else:
+                state, f, led = carry
             with sc("integrate_begin"):
                 state, aux, payload = fns.begin(state, f, ctx)
             led = ledger.release(led, "fwd", 0)
@@ -240,7 +343,10 @@ class StepPipeline:
                 F_ext = self._poison_force(
                     F_ext, self._fire(ctx, k, FAULT_FORCE))
             led = self._release_rev(led, 0, ctx, k)
-            f_new = self._rev(F_ext)
+            if stateful:
+                f_new, wef = self._rev_ef(F_ext, wef)
+            else:
+                f_new = self._rev(F_ext)
             led = ledger.acquire(led, "rev", 0)
             with sc("integrate_finish"):
                 state, f_new, m_fin = fns.finish(state, aux, f_new, ctx)
@@ -250,16 +356,19 @@ class StepPipeline:
             state, f_new = lax.optimization_barrier((state, f_new))
             m = {**m_force, **m_fin,
                  **self.tracer.step_metrics(ledger, led)}
+            if stateful:
+                return (state, f_new, wef, led), m
             return (state, f_new, led), m
 
         xs = jnp.arange(n_steps, dtype=jnp.int32) if self.inject else None
-        (state, f, led), metrics = lax.scan(
-            step, (state, f0, ledger.init()), xs, length=n_steps)
-        return state, f, metrics, led
+        carry0 = ((state, f0, wef0, ledger.init()) if stateful
+                  else (state, f0, ledger.init()))
+        carry, metrics = lax.scan(step, carry0, xs, length=n_steps)
+        return carry[0], carry[1], metrics, carry[-1]
 
     # -- the depth-d window ------------------------------------------------
 
-    def _pipelined_step(self, carry, k, ctx):
+    def _pipelined_step(self, carry, k, ctx, wire_on=False, f_dtype=None):
         """Drain step ``k-1``'s force return, issue step ``k``'s forward
         half (the skew-one unit every window is built from).
 
@@ -270,13 +379,23 @@ class StepPipeline:
         transfer sits in the same program region as the NEXT unit's work
         — and, with ``depth > 2``, the same region as the following
         ``depth - 2`` units of the unrolled window.
+
+        ``wire_on`` switches the slot ring to wire-format parts: fills
+        encode (quantize once per step, EF updated there), drains decode
+        + splice and run the raw reverse exchange — the composition
+        equals serial mode's ``rev_local_ef`` quantize-and-splice
+        bitwise, preserving off == double_buffer conformance.
         """
         fns, ledger, depth = self.fns, self.ledger, self.depth
         sc = self.tracer.scope
-        state, slots, aux, led = carry
+        stateful = wire_on and self.plan.wire.stateful
+        if stateful:
+            state, slots, wef, aux, led = carry
+        else:
+            state, slots, aux, led = carry
         prev, cur = (k - 1) % depth, k % depth
-        F_prev = lax.dynamic_index_in_dim(slots, prev, 0, keepdims=False)
-        f_prev = self._rev(F_prev)
+        F_prev = self._slot_drain(slots, prev, f_dtype, wire_on)
+        f_prev = self._rev_raw(F_prev) if wire_on else self._rev(F_prev)
         led = ledger.acquire(led, "rev", prev)
         with sc("integrate_finish"):
             state, f_carry, m_fin = fns.finish(state, aux, f_prev, ctx)
@@ -293,16 +412,21 @@ class StepPipeline:
         if self.inject:
             F_ext = self._poison_force(
                 F_ext, self._fire(ctx, k, FAULT_FORCE))
-        slots = lax.dynamic_update_index_in_dim(slots, F_ext, cur, 0)
+        slots, wef = self._slot_fill(
+            slots, F_ext, wef if stateful else None, cur, wire_on)
         led = self._release_rev(led, cur, ctx, k)
         # pin the step boundary (see _run_serial)
         state, slots = lax.optimization_barrier((state, slots))
         m_fin = {**m_fin, **self.tracer.step_metrics(ledger, led)}
+        if stateful:
+            return (state, slots, wef, aux, led), m_force, m_fin
         return (state, slots, aux, led), m_force, m_fin
 
     def _run_pipelined(self, state, f0, n_steps, ctx):
         fns, ledger, depth = self.fns, self.ledger, self.depth
         span = depth - 1           # steps resident per fused window region
+        wire_on, wef0 = self._wire_state(state, f0, ctx)
+        stateful = wef0 is not None
 
         # prologue: step 0's forward half fills buffer slot 0; its force-
         # return signal is released immediately — the put is in flight
@@ -317,13 +441,18 @@ class StepPipeline:
         F0, m_force0 = fns.force(ext, ctx)
         if self.inject:
             F0 = self._poison_force(F0, self._fire(ctx, 0, FAULT_FORCE))
-        slots = jnp.zeros((depth,) + F0.shape, F0.dtype)
-        slots = lax.dynamic_update_index_in_dim(slots, F0, 0, 0)
+        f_dtype = F0.dtype
+        slots, wef = self._slot_ring(F0, wef0, wire_on)
         led = self._release_rev(led, 0, ctx, 0)
 
         m_force_chunks = [_stack1(m_force0)]
         m_fin_chunks = []
-        carry = (state, slots, aux, led)
+        carry = ((state, slots, wef, aux, led)
+                 if stateful else (state, slots, aux, led))
+
+        def unit(carry, k):
+            return self._pipelined_step(carry, k, ctx, wire_on=wire_on,
+                                        f_dtype=f_dtype)
 
         # main scan: whole windows of `span` steps; the python loop
         # unrolls the window into ONE fused program region, so the rev
@@ -336,8 +465,7 @@ class StepPipeline:
             def window(carry, ks_row):
                 mf, mn = [], []
                 for j in range(span):
-                    carry, m_force, m_fin = self._pipelined_step(
-                        carry, ks_row[j], ctx)
+                    carry, m_force, m_fin = unit(carry, ks_row[j])
                     mf.append(m_force)
                     mn.append(m_fin)
                 mf = {k: jnp.stack([m[k] for m in mf]) for k in mf[0]}
@@ -355,14 +483,16 @@ class StepPipeline:
         # `rem` steps that do not fill a whole window, then the final
         # step's outstanding force return
         for k in range(1 + n_full * span, n_steps):
-            carry, m_force, m_fin = self._pipelined_step(
-                carry, jnp.int32(k), ctx)
+            carry, m_force, m_fin = unit(carry, jnp.int32(k))
             m_force_chunks.append(_stack1(m_force))
             m_fin_chunks.append(_stack1(m_fin))
-        state, slots, aux, led = carry
+        if stateful:
+            state, slots, _wef, aux, led = carry
+        else:
+            state, slots, aux, led = carry
         last = (n_steps - 1) % depth
-        F_last = lax.dynamic_index_in_dim(slots, last, 0, keepdims=False)
-        f_last = self._rev(F_last)
+        F_last = self._slot_drain(slots, last, f_dtype, wire_on)
+        f_last = self._rev_raw(F_last) if wire_on else self._rev(F_last)
         led = ledger.acquire(led, "rev", last)
         with self.tracer.scope("integrate_finish"):
             state, f_carry, m_fin_last = fns.finish(state, aux, f_last, ctx)

@@ -1,0 +1,262 @@
+"""Drift-bounded compressed halo payloads (``HaloSpec.wire_dtype``).
+
+Halo bytes are the strong-scaling ceiling in the paper's alpha-beta model
+once latency is hidden, so the next multiple comes from shrinking the wire
+payload itself.  This module is the single codec seam every layer shares:
+
+* :class:`WireCodec` — elementwise encode/decode between the payload dtype
+  and a wire format.  The two exchange directions compress differently,
+  because they fail differently (all numbers measured by the PR 5 NVE
+  harness, see MEASURED_DRIFT):
+
+  - the *coordinate* (forward) direction has a **float32 floor**: pair
+    distances consume coordinate error directly, so quantizing absolute
+    positions below single precision corrupts the potential — a raw bf16
+    coordinate cast measures ~50x the dense drift, and error feedback on
+    coordinates makes it *worse* (it dithers positions).  f64 payloads
+    ship f32 coordinates (GROMACS' mixed-precision comm choice for
+    double-precision trajectories); f32 payloads ship dense.
+  - the *force-return* (reverse) direction carries the named format:
+    force contributions are summed and their quantization error acts as
+    zero-mean noise the integrator tolerates, so ``"bfloat16"`` /
+    ``"float16"`` casts measure at the dense drift level.  ``"int8_ef"``
+    is per-tensor-scaled int8 with error feedback — the EF machinery's
+    legitimate domain (summed gradient-like quantities), shared with
+    :mod:`repro.optim.compression` so the gradient path and the halo
+    path cannot drift apart; ``"int8"`` (no feedback) exists as the
+    documented over-aggressive config the drift gate rejects.
+
+* shared int8 helpers (:func:`int8_scale` / :func:`int8_quantize` /
+  :func:`int8_dequantize`) — hardened against nonfinite inputs: the scale
+  is taken over finite entries only and nonfinite entries quantize to 0,
+  so a single NaN no longer poisons the whole tensor's dequant (it used
+  to propagate through ``max(|g|)``).
+
+* the build-time drift gate (:func:`gate_wire_config`) — the PR 5 NVE
+  harness measured each wire format's 200-step energy drift on the slab
+  system (``tests/test_nve_drift.py`` keeps the table honest); a config
+  whose measured drift exceeds the dense-f32 bound raises
+  :class:`WireDriftError` at plan-build time, with the same
+  ``verify="warn"/"off"`` escape hatch as the PR 6 schedule verifier.
+
+Emulation contract: quantization is applied once per exchange direction
+at the plan seam (quantize-before-send, body spliced back exactly —
+only data that crosses the wire is lossy), so every backend transports
+the same wire-gridded payload and the PR 4 bitwise cross-backend
+conformance carries over to compressed exchanges.  Staged multi-hop
+forwarding re-rounds implicitly (fp casts are idempotent on wire-grid
+values); per-hop re-scaling of int8 accumulations is not emulated.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# recognized wire formats; None (dense) is always legal
+WIRE_DTYPES = ("float32", "bfloat16", "float16", "int8_ef", "int8")
+
+# wire bytes per payload element
+WIRE_ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2,
+                 "int8_ef": 1, "int8": 1}
+
+_FP_WIRE = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}
+
+# ---------------------------------------------------------------------------
+# drift gate: measured NVE drift per wire format vs the dense-f32 bound
+# ---------------------------------------------------------------------------
+
+# the dense-f32 drift level of tests/test_nve_drift.py (DRIFT_BOUND there):
+# measured dense drift is ~4e-4/atom over 200 steps, integrator-truncation
+# dominated; a compressed exchange must stay at this level to be accepted
+DENSE_F32_DRIFT_BOUND = 1.5e-3
+
+# measured by tests/test_nve_drift.py (float64 two-slab system, 200 steps,
+# drift = (E.max - E.min) / n_atoms, fused backend; dense reference
+# measures 3.4e-4).  All formats ship f32-floor coordinates; the named
+# format applies to the force return.  The test suite re-measures and
+# asserts these classifications so the table cannot silently go stale.
+MEASURED_DRIFT = {
+    "float32": 3.4e-4,    # bitwise == dense on f32 payloads
+    "bfloat16": 3.2e-4,   # force quant noise integrates as zero-mean
+    "float16": 3.4e-4,    # at the dense level
+    "int8_ef": 4.3e-4,    # error feedback keeps the bias corrected
+    "int8": 3.0e-3,       # no feedback: bias accumulates -> REJECTED
+}
+
+VERIFY_MODES = ("error", "warn", "off")
+
+
+class WireDriftError(ValueError):
+    """A wire format whose measured NVE drift exceeds the dense-f32 bound."""
+
+
+def gate_wire_config(wire_dtype: Optional[str], verify: str = "error",
+                     bound: float = DENSE_F32_DRIFT_BOUND
+                     ) -> Optional[float]:
+    """Build-time acceptance gate for a compressed-halo config.
+
+    Returns the measured drift for ``wire_dtype`` (None for dense).
+    Raises :class:`WireDriftError` when that drift exceeds ``bound``
+    (``verify="warn"`` downgrades to a ``RuntimeWarning``, ``"off"``
+    skips — the PR 6 escape-hatch convention), and ``ValueError`` for
+    unknown formats regardless of ``verify`` (never silently degrade).
+    """
+    if verify not in VERIFY_MODES:
+        raise ValueError(f"unknown verify mode {verify!r}; "
+                         f"available: {VERIFY_MODES}")
+    if wire_dtype is None:
+        return None
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                         f"available: {WIRE_DTYPES} or None")
+    if verify == "off":
+        return MEASURED_DRIFT[wire_dtype]
+    drift = MEASURED_DRIFT[wire_dtype]
+    if drift > bound:
+        msg = (f"wire_dtype={wire_dtype!r}: measured NVE drift "
+               f"{drift:.2e}/atom exceeds the dense-f32 bound "
+               f"{bound:.2e} (tests/test_nve_drift.py harness); this "
+               "config corrupts trajectories and is rejected at build "
+               "time.  Use 'int8_ef' (error feedback) or a 16-bit wire "
+               "format, or pass verify='warn' to measure it anyway.")
+        if verify == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        else:
+            raise WireDriftError(msg)
+    return drift
+
+
+# ---------------------------------------------------------------------------
+# shared int8 quantize/dequant helpers (also used by optim.compression)
+# ---------------------------------------------------------------------------
+
+def int8_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor int8 scale, hardened against nonfinite inputs.
+
+    ``max(|x|) / 127 + eps`` over *finite* entries only: a NaN/Inf in
+    ``x`` must corrupt at most its own slot, never the whole tensor's
+    dequant through a poisoned scale.  A zero (or all-nonfinite) tensor
+    yields the epsilon scale, quantizing everything to 0.
+    """
+    finite = jnp.isfinite(x)
+    amax = jnp.max(jnp.abs(jnp.where(finite, x, 0)))
+    return amax / 127.0 + jnp.asarray(1e-12, amax.dtype)
+
+
+def int8_quantize(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Round/clip to int8 at ``scale``; nonfinite entries quantize to 0."""
+    q = jnp.where(jnp.isfinite(x), jnp.round(x / scale), 0)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def int8_encode(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """Quantize + the error-feedback residual: ``(q, scale, err)``.
+
+    ``err`` is the finite part of ``x - dequant(q)`` — what error
+    feedback carries to the next round so the quantization bias is
+    corrected over steps instead of accumulating.
+    """
+    scale = int8_scale(x)
+    q = int8_quantize(x, scale)
+    err = jnp.where(jnp.isfinite(x), x, 0) - int8_dequantize(q, scale,
+                                                             x.dtype)
+    return q, scale, err
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+class WireCodec:
+    """Elementwise wire-format codec for one ``HaloSpec.wire_dtype``.
+
+    ``encode(x, ef)`` / ``decode(parts, dtype)`` / ``roundtrip(x, ef)``
+    are the *force-return* (reverse) direction: the named format, with
+    error feedback for int8_ef.  ``fwd_roundtrip(x)`` is the coordinate
+    (forward) direction: a float32-floor cast regardless of the named
+    format (see the module docstring for the measured rationale).
+    ``encode``'s parts are what send buffers / pipeline slot rings
+    store; ``roundtrip`` composes encode+decode — the value every
+    consumer of wire-crossed data sees at the plan seam.
+    """
+
+    def __init__(self, name: str):
+        if name not in WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {name!r}; "
+                             f"available: {WIRE_DTYPES} or None")
+        self.name = name
+        self.wire_itemsize = WIRE_ITEMSIZE[name]
+        self.is_float = name in _FP_WIRE
+        self.jdtype = _FP_WIRE.get(name)
+        # stateful formats thread EF arrays through the caller's scan
+        self.stateful = name == "int8_ef"
+
+    @staticmethod
+    def fwd_itemsize(payload_dtype) -> int:
+        """Coordinate-direction wire bytes/elem: the float32 floor."""
+        return min(4, np.dtype(payload_dtype).itemsize)
+
+    @staticmethod
+    def fwd_wire_dtype(payload_dtype) -> Optional[str]:
+        """Coordinate-direction wire dtype, or None when the payload
+        already sits at (or below) the float32 floor and rides dense."""
+        if np.dtype(payload_dtype).itemsize > 4:
+            return "float32"
+        return None
+
+    def fwd_roundtrip(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Wire-grid a coordinate payload: f32 cast for wide payloads,
+        identity at or below the floor."""
+        if self.fwd_wire_dtype(x.dtype) is None:
+            return x
+        return x.astype(jnp.float32).astype(x.dtype)
+
+    def encode(self, x: jnp.ndarray, ef: Optional[jnp.ndarray] = None
+               ) -> Tuple[Tuple[jnp.ndarray, ...], Optional[jnp.ndarray]]:
+        if self.is_float:
+            return (x.astype(self.jdtype),), ef
+        comp = x if ef is None else x + ef
+        if ef is None:
+            scale = int8_scale(comp)
+            return (int8_quantize(comp, scale), scale), None
+        q, scale, err = int8_encode(comp)
+        return (q, scale), err
+
+    def decode(self, parts: Tuple[jnp.ndarray, ...], dtype) -> jnp.ndarray:
+        if self.is_float:
+            return parts[0].astype(dtype)
+        q, scale = parts
+        return int8_dequantize(q, scale, dtype)
+
+    def roundtrip(self, x: jnp.ndarray, ef: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """``decode(encode(x))`` — the wire-gridded payload (+ new EF)."""
+        parts, new_ef = self.encode(x, ef)
+        return self.decode(parts, x.dtype), new_ef
+
+    def part_shapes(self, shape, dtype):
+        """Shape/dtype structs of ``encode``'s parts for a payload shape
+        (what a pipeline slot ring allocates per slot)."""
+        if self.is_float:
+            return ((tuple(shape), self.jdtype),)
+        return ((tuple(shape), jnp.int8), ((), np.dtype(dtype)))
+
+    def __repr__(self):
+        return f"WireCodec({self.name!r})"
+
+
+def make_codec(wire_dtype: Optional[str]) -> Optional[WireCodec]:
+    """Codec for a spec's ``wire_dtype`` (None = dense, no codec)."""
+    if wire_dtype is None:
+        return None
+    return WireCodec(wire_dtype)

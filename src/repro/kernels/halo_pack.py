@@ -40,7 +40,10 @@ def _pack_kernel(idx_ref, src_ref, out_ref, *, chunk: int, feat: int):
 
     Negative indices are padding and produce zero rows (the paper's
     index-map entries are dense; ours carry explicit padding so capacity
-    buffers have static shape).
+    buffers have static shape).  When the output buffer is wire-dtyped
+    (compressed halo payloads) the gathered rows are quantized in-register
+    before the store: quantize fuses into pack, so the wire format never
+    materializes in HBM — only the packed send buffer is compressed.
     """
     c = pl.program_id(0)
     idx = idx_ref[pl.ds(c * chunk, chunk)]
@@ -48,14 +51,19 @@ def _pack_kernel(idx_ref, src_ref, out_ref, *, chunk: int, feat: int):
     safe = jnp.maximum(idx, 0)
     rows = src_ref[safe, :]                      # gathered chunk
     rows = jnp.where(valid[:, None], rows, jnp.zeros((), rows.dtype))
-    out_ref[pl.ds(c * chunk, chunk), :] = rows
+    out_ref[pl.ds(c * chunk, chunk), :] = rows.astype(out_ref.dtype)
 
 
 def pack(src: jax.Array, index_map: jax.Array, chunk: int = 128,
-         interpret: bool = True) -> jax.Array:
-    """Pack rows of ``src`` (P, F) selected by ``index_map`` (M,)."""
+         interpret: bool = True, wire_dtype=None) -> jax.Array:
+    """Pack rows of ``src`` (P, F) selected by ``index_map`` (M,).
+
+    ``wire_dtype`` (e.g. ``"bfloat16"``) returns the packed buffer in
+    that dtype with the cast fused into the gather (quantize-into-pack).
+    """
     M = index_map.shape[0]
     F = src.shape[-1]
+    out_dtype = src.dtype if wire_dtype is None else jnp.dtype(wire_dtype)
     chunk = min(chunk, M)
     while M % chunk:
         chunk -= 1
@@ -65,7 +73,7 @@ def pack(src: jax.Array, index_map: jax.Array, chunk: int = 128,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((M, F), src.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, F), out_dtype),
         interpret=interpret,
     )(index_map, src)
 
@@ -127,6 +135,12 @@ def _put_signal_kernel(idx_ref, src_ref, out_ref, scratch, send_sem,
     final wait drains the receives (the signal acquire).  ``shift`` is the
     ring offset of the put target: -1 for the coordinate (forward) halo
     (send to -1, receive from +1), +1 for the force-return (reverse) path.
+
+    When the scratch/out buffers are wire-dtyped (compressed halo
+    payloads) the quantizing cast happens in-register between gather and
+    the scratch store, so both the VMEM staging buffer AND the remote DMA
+    move wire-sized rows — the wire format never round-trips through HBM
+    on the send side.
     """
     c = pl.program_id(0)
     n_chunks = pl.num_programs(0)
@@ -136,7 +150,8 @@ def _put_signal_kernel(idx_ref, src_ref, out_ref, scratch, send_sem,
     idx = idx_ref[pl.ds(c * chunk, chunk)]
     valid = idx >= 0
     rows = src_ref[jnp.maximum(idx, 0), :]
-    scratch[pl.ds(0, chunk), :] = jnp.where(valid[:, None], rows, 0.0)
+    rows = jnp.where(valid[:, None], rows, 0.0).astype(scratch.dtype)
+    scratch[pl.ds(0, chunk), :] = rows
 
     copy = pltpu.make_async_remote_copy(
         src_ref=scratch.at[pl.ds(0, chunk), :],
@@ -149,15 +164,18 @@ def _put_signal_kernel(idx_ref, src_ref, out_ref, scratch, send_sem,
 
 def put_signal(src: jax.Array, index_map: jax.Array, axis: str, ring: int,
                chunk: int = 128, interpret: bool = True,
-               shift: int = -1) -> jax.Array:
+               shift: int = -1, wire_dtype=None) -> jax.Array:
     """Device-initiated halo put: returns this device's RECEIVED buffer.
 
     Must run inside shard_map over ``axis`` (ring size ``ring``).
     ``shift=-1`` puts to the -1 neighbor (coordinate halo, receive from
     +1); ``shift=+1`` puts to the +1 neighbor (force-return path).
+    ``wire_dtype`` (e.g. ``"bfloat16"``) makes scratch, DMA, and the
+    returned receive buffer wire-dtyped (quantize fused into pack).
     """
     M = index_map.shape[0]
     F = src.shape[-1]
+    out_dtype = src.dtype if wire_dtype is None else jnp.dtype(wire_dtype)
     chunk = min(chunk, M)
     while M % chunk:
         chunk -= 1
@@ -168,8 +186,8 @@ def put_signal(src: jax.Array, index_map: jax.Array, axis: str, ring: int,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((M, F), src.dtype),
-        scratch_shapes=[pltpu.VMEM((chunk, F), src.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, F), out_dtype),
+        scratch_shapes=[pltpu.VMEM((chunk, F), out_dtype),
                         pltpu.SemaphoreType.DMA,
                         pltpu.SemaphoreType.DMA],
         interpret=interpret,
@@ -191,6 +209,10 @@ def _fused_pulses_kernel(idx_ref, src_ref, out_ref, scratch,
     with the signal wait fused into the same kernel (Alg. 5): the remote
     copy's recv semaphore is the data signal, dep_sem carries the
     last-completing-chunk release notification to the next pulse.
+
+    Staged forwarding reads pulse p-1's receive buffer verbatim, so wire
+    compression of this kernel would re-round at every hop; multi-pulse
+    dims therefore always ship dense (see SignalBackend.fwd).
     """
     p = pl.program_id(0)
     c = pl.program_id(1)

@@ -208,7 +208,7 @@ HALO_BACKENDS = ("serialized", "fused", "pallas", "signal")
 
 def halo_cell_name(dd_name: str, backend: str, width: int = 1,
                    pulses: int = 1, pipeline: str = "off",
-                   depth: int = 2) -> str:
+                   depth: int = 2, wire_dtype=None) -> str:
     name = f"halo__{dd_name}__{backend}"
     if width != 1:
         name += f"__w{width}"
@@ -218,12 +218,14 @@ def halo_cell_name(dd_name: str, backend: str, width: int = 1,
         name += f"__{pipeline}"
         if depth != 2:
             name += f"__d{depth}"
+    if wire_dtype:
+        name += f"__wd{wire_dtype}"
     return name
 
 
 def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
                   width: int = 1, pulses: int = 1, pipeline: str = "off",
-                  depth: int = 2, verbose: bool = True):
+                  depth: int = 2, wire_dtype=None, verbose: bool = True):
     """Lower + compile one HaloPlan.fwd cell and record plan + HLO stats.
 
     The plan-reported byte/critical-path numbers are the canonical ones
@@ -232,7 +234,9 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
     ``pulses`` select the width>1 multi-pulse schedules; ``pipeline`` /
     ``depth`` select the per-step overlap model recorded under
     ``overlap`` (the depth sweep makes the exposed-phase amortization of
-    deeper in-flight windows measurable before real-mesh runs).
+    deeper in-flight windows measurable before real-mesh runs);
+    ``wire_dtype`` selects a compressed payload format whose
+    direction-aware byte accounting lands in ``plan_stats``.
     """
     from repro.core.halo_plan import HaloPlan, HaloSpec
     from repro.launch.mesh import make_mesh
@@ -240,7 +244,8 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
     sp_cell = None
     record = {"kind": "halo", "dd": dd_name, "backend": backend,
               "local": list(local), "width": width, "pulses": pulses,
-              "pipeline": pipeline, "pipeline_depth": depth, "ok": False}
+              "pipeline": pipeline, "pipeline_depth": depth,
+              "wire_dtype": wire_dtype, "ok": False}
     try:
       with obs_span("dryrun/halo_cell", default_registry(), dd=dd_name,
                     backend=backend) as sp_cell:
@@ -251,7 +256,8 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
         pulses_per_dim = tuple(pulses if w else 1 for w in widths)
         spec = HaloSpec(axis_names=("z", "y", "x"), widths=widths,
                         backend=backend, dtype="float32",
-                        feature_elems=feat, pulses=pulses_per_dim)
+                        feature_elems=feat, pulses=pulses_per_dim,
+                        wire_dtype=wire_dtype)
         plan = HaloPlan.build(spec, mesh)
         gshape = tuple(n * d for n, d in zip(local, dd)) + (feat,)
         arg = jax.ShapeDtypeStruct(gshape, np.float32)
@@ -274,6 +280,9 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
                   f"ser_crit={st['serialized_critical_bytes']} "
                   f"fused_crit={st['fused_critical_bytes']} "
                   f"exposed/step={st['exposed_phases_per_step']}")
+            if wire_dtype:
+                print(f"  wire: bytes={st['wire_bytes']} "
+                      f"reduction={st['wire_reduction']:.2f}x")
             print(f"  hlo collective bytes: {parsed['collective_bytes']:.3e}")
     except Exception as e:  # noqa: BLE001
         record["error"] = f"{type(e).__name__}: {e}"
@@ -288,21 +297,22 @@ def run_halo_cell(dd_name: str, backend: str, local=(8, 8, 8), feat: int = 4,
 
 
 def run_halo_cells(force: bool = False, width: int = 1, pulses: int = 1,
-                   pipeline: str = "off", depth: int = 2):
+                   pipeline: str = "off", depth: int = 2, wire_dtype=None):
     RESULTS.mkdir(parents=True, exist_ok=True)
     for dd_name in HALO_DD:
         for backend in HALO_BACKENDS:
             name = halo_cell_name(dd_name, backend, width, pulses,
-                                  pipeline, depth)
+                                  pipeline, depth, wire_dtype)
             path = RESULTS / f"{name}.json"
             if path.exists() and not force:
                 print(f"[skip] {path.name} exists")
                 continue
             print(f"[halo] {dd_name} x {backend} w={width} p={pulses} "
-                  f"pipeline={pipeline} depth={depth}", flush=True)
+                  f"pipeline={pipeline} depth={depth} "
+                  f"wire={wire_dtype}", flush=True)
             rec = run_halo_cell(dd_name, backend, width=width,
                                 pulses=pulses, pipeline=pipeline,
-                                depth=depth)
+                                depth=depth, wire_dtype=wire_dtype)
             path.write_text(json.dumps(rec, indent=1))
             print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
                   f"({rec['wall_s']}s)", flush=True)
@@ -314,7 +324,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
                 n_atoms: int = 800, steps: int = 6, dd=(2, 2, 2),
                 pipeline: str = "off", depth: int = 2,
                 overlap_rebin: bool = False, nstprune: int = 0,
-                verbose: bool = True):
+                wire_dtype=None, verbose: bool = True):
     """Run a short DD simulation and record the chosen force backend, its
     prune ratio / evaluated-work accounting (tier ladders, rolling-prune
     columns), the occupancy-adjusted halo byte accounting
@@ -329,7 +339,8 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
     record = {"kind": "mdforce", "dd": dd_name, "backend": halo_backend,
               "force_backend": force_backend, "pipeline": pipeline,
               "pipeline_depth": depth, "overlap_rebin": overlap_rebin,
-              "nstprune": nstprune, "n_atoms": n_atoms, "ok": False}
+              "nstprune": nstprune, "wire_dtype": wire_dtype,
+              "n_atoms": n_atoms, "ok": False}
     try:
       with obs_span("dryrun/md_cell", default_registry(), dd=dd_name,
                     backend=halo_backend,
@@ -340,7 +351,8 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
                         backend=halo_backend)
         eng = MDEngine(system, mesh, spec, pipeline=pipeline,
                        pipeline_depth=depth, overlap_rebin=overlap_rebin,
-                       force_backend=force_backend, nstprune=nstprune)
+                       force_backend=force_backend, nstprune=nstprune,
+                       wire_dtype=wire_dtype)
         _, metrics, diags = eng.simulate(steps)
         record.update({
             "ok": True,
@@ -348,7 +360,10 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
             "pair_stats": eng.pair_stats(),
             "halo_stats": {k: v for k, v in eng.halo_stats().items()
                            if k in ("total_bytes", "bytes_index",
-                                    "useful_bytes", "occupancy")},
+                                    "useful_bytes", "occupancy",
+                                    "wire_bytes", "wire_reduction",
+                                    "wire_itemsize_fwd",
+                                    "wire_itemsize_rev")},
             "overlap": eng.overlap_stats(),
             "pe_final": float(np.asarray(metrics["pe"])[-1]),
             "n_atoms_conserved": int(np.asarray(diags[-1]["n_atoms"]))
@@ -375,7 +390,7 @@ def run_md_cell(force_backend: str = "dense", halo_backend: str = "fused",
 def run_md_cells(force_backend: str, force: bool = False,
                  halo_backend: str = "fused", pipeline: str = "off",
                  depth: int = 2, overlap_rebin: bool = False,
-                 nstprune: int = 0):
+                 nstprune: int = 0, wire_dtype=None):
     RESULTS.mkdir(parents=True, exist_ok=True)
     name = f"mdforce__3d__{halo_backend}__{force_backend}"
     if pipeline != "off":
@@ -386,17 +401,20 @@ def run_md_cells(force_backend: str, force: bool = False,
         name += "__or"
     if nstprune:
         name += f"__np{nstprune}"
+    if wire_dtype:
+        name += f"__wd{wire_dtype}"
     path = RESULTS / f"{name}.json"
     if path.exists() and not force:
         print(f"[skip] {path.name} exists")
         return
     print(f"[mdforce] 3d x {halo_backend} x force={force_backend} "
           f"pipeline={pipeline} depth={depth} "
-          f"overlap_rebin={overlap_rebin} nstprune={nstprune}", flush=True)
+          f"overlap_rebin={overlap_rebin} nstprune={nstprune} "
+          f"wire={wire_dtype}", flush=True)
     rec = run_md_cell(force_backend=force_backend,
                       halo_backend=halo_backend, pipeline=pipeline,
                       depth=depth, overlap_rebin=overlap_rebin,
-                      nstprune=nstprune)
+                      nstprune=nstprune, wire_dtype=wire_dtype)
     path.write_text(json.dumps(rec, indent=1))
     print(f"[done] {path.name}: {'OK' if rec['ok'] else 'FAIL'} "
           f"({rec['wall_s']}s)", flush=True)
@@ -437,6 +455,10 @@ def main():
     ap.add_argument("--nstprune", type=int, default=0,
                     help="rolling inner-prune cadence for --md cells "
                          "(dual pair list; 0 = outer list only)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["bfloat16", "float16", "int8_ef", "float32"],
+                    help="compressed halo payload format for --halo/--md "
+                         "cells (HaloSpec.wire_dtype)")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--pod-compress", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
@@ -451,13 +473,14 @@ def main():
     if args.halo:
         run_halo_cells(force=args.force, width=args.halo_width,
                        pulses=args.halo_pulses, pipeline=args.pipeline,
-                       depth=args.pipeline_depth)
+                       depth=args.pipeline_depth,
+                       wire_dtype=args.wire_dtype)
         return
     if args.md:
         run_md_cells(force_backend=args.force_backend, force=args.force,
                      pipeline=args.pipeline, depth=args.pipeline_depth,
                      overlap_rebin=args.overlap_rebin,
-                     nstprune=args.nstprune)
+                     nstprune=args.nstprune, wire_dtype=args.wire_dtype)
         return
 
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -10,6 +10,12 @@ All functions are per-tensor and run inside a ``shard_map`` manual over the
 ``pod`` axis (see launch/steps.py); the collective itself is an all-gather
 of the compressed payload + local reduction, so the HLO collective bytes
 shrink measurably — verified in the multi-pod §Perf entries.
+
+The int8 scale/quantize/dequant primitives are shared with the compressed
+halo path (:mod:`repro.core.wire` — one implementation, both wires): the
+scale is taken over finite entries only and nonfinite entries quantize
+to 0, so a single NaN gradient element can no longer poison the whole
+tensor's dequant through ``max(|g|)``.
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.wire import int8_dequantize, int8_encode
+
 
 def ef_init(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -27,14 +35,11 @@ def ef_init(params):
 
 def _int8_reduce(g, axis: str):
     """Quantize to int8, all-gather over the pod axis, dequant + mean."""
-    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    q, scale, err = int8_encode(g)
     qs = lax.all_gather(q, axis)                       # int8 on the wire
     ss = lax.all_gather(scale, axis)
-    deq = qs.astype(jnp.float32) * ss.reshape(
-        (-1,) + (1,) * (qs.ndim - 1))
+    deq = int8_dequantize(qs, ss.reshape((-1,) + (1,) * (qs.ndim - 1)))
     out = jnp.mean(deq, axis=0)
-    err = g - (jnp.clip(jnp.round(g / scale), -127, 127) * scale)
     return out, err
 
 

@@ -71,6 +71,75 @@ def check_signal_rev_bitwise(mesh):
     print("signal/pallas rev bitwise identical to serialized")
 
 
+def check_wire_case(mesh):
+    """Compressed payloads (HaloSpec.wire_dtype) on the real 8-device
+    grid: every backend must transport the same wire-gridded payload —
+    cross-backend bitwise equality holds per wire format (fused rev at
+    its usual one-ulp accumulation tolerance, same as dense), the body
+    never crosses the wire, and f32 coordinate sends ride dense (the
+    forward direction's float32 floor)."""
+    axes = ("z", "y", "x")
+    widths = (1, 2, 1)
+    rng = np.random.RandomState(3)
+    old_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        x = jnp.asarray(rng.randn(8, 6, 4, 5))          # float64 payload
+        dense = np.asarray(HaloPlan.build(
+            HaloSpec(axes, widths, backend="serialized", dtype="float64"),
+            mesh).fwd(x))
+        # each device's extended block keeps its exact body in the
+        # leading corner with halo rows appended per dim — these index
+        # vectors pick the body rows out of the stacked global array
+        dd = [int(mesh.shape[a]) for a in axes]
+        locs = [g // n for g, n in zip((8, 6, 4), dd)]
+        ids = [np.concatenate([np.arange(d * (lo + w), d * (lo + w) + lo)
+                               for d in range(n)])
+               for lo, w, n in zip(locs, widths, dd)]
+        for wd in ("float32", "bfloat16", "float16", "int8_ef"):
+            ref_e = ref_r = None
+            for b in BACKENDS:
+                plan = HaloPlan.build(
+                    HaloSpec(axes, widths, backend=b, dtype="float64",
+                             wire_dtype=wd), mesh)
+                ext = plan.fwd(x)
+                got_e = np.asarray(ext)
+                got_r = np.asarray(plan.rev(ext))
+                if ref_e is None:
+                    ref_e, ref_r = got_e, got_r
+                assert np.array_equal(got_e, ref_e), (wd, b, "fwd")
+                if b == "fused":
+                    # fused rev accumulates return contributions in a
+                    # different order than serialized — one-ulp f64
+                    # rounding even on DENSE payloads, so the wire path
+                    # inherits the same (tight) tolerance
+                    assert np.allclose(got_r, ref_r, rtol=0,
+                                       atol=1e-12), (wd, b, "rev")
+                else:
+                    assert np.array_equal(got_r, ref_r), (wd, b, "rev")
+            # local body exact: the spliced rows equal the original
+            # payload bit-for-bit (only halo rows are wire-gridded)
+            assert np.array_equal(ref_e[np.ix_(*ids)], np.asarray(x)), wd
+            if wd == "float32":
+                # the f32 rev format's halo rows are exactly the
+                # f32-rounded dense rows: fwd is pure data movement
+                # here (no wrap shift), so cast and exchange commute
+                expect = dense.astype(np.float32).astype(np.float64)
+                expect[np.ix_(*ids)] = np.asarray(x)
+                assert np.array_equal(ref_e, expect), "f32 grid"
+        # f32 payloads sit at the floor: forward exchange bitwise dense
+        x32 = jnp.asarray(rng.randn(8, 6, 4, 5).astype(np.float32))
+        d32 = np.asarray(HaloPlan.build(
+            HaloSpec(axes, widths, backend="fused"), mesh).fwd(x32))
+        w32 = np.asarray(HaloPlan.build(
+            HaloSpec(axes, widths, backend="fused",
+                     wire_dtype="bfloat16"), mesh).fwd(x32))
+        assert np.array_equal(d32, w32), "f32 fwd must ride dense"
+    finally:
+        jax.config.update("jax_enable_x64", old_x64)
+    print("wire formats: cross-backend bitwise + f32 floor OK")
+
+
 def main():
     assert len(jax.devices()) >= 8, "need 8 virtual devices"
     mesh = make_mesh((2, 2, 2), ("z", "y", "x"))
@@ -82,6 +151,7 @@ def main():
     # mixed pulse counts
     check_case(mesh, (2, 3, 1), (2, 2, 1), (8, 6, 4, 5))
     check_signal_rev_bitwise(mesh)
+    check_wire_case(mesh)
 
     # overlap model sanity on the 8-device plan
     plan = HaloPlan.build(HaloSpec(("z", "y", "x"), (1, 1, 1),

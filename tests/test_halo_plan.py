@@ -191,6 +191,62 @@ def test_engine_halo_stats_accounts_cell_i_exchange():
     assert s["useful_bytes"] == round(s["total_bytes"] * occ)
 
 
+def test_plan_stats_cells_first_class_mixed_itemsizes(mesh1d):
+    """Regression: byte fields must scale from the first-class
+    ``exchanged_cells`` volume, never back-derive it from
+    ``total_bytes`` — with a float64 payload and an int32 index
+    side-channel (mixed itemsizes) the back-derivation overcounted
+    the index bytes 2x, and with ``feature_elems=0`` (index-only
+    accounting) it collapsed the volume to zero."""
+    plan = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float64",
+                 feature_elems=4)
+    s = plan.stats((6,), index_elems=2, index_itemsize=4)
+    assert s["exchanged_cells"] == 2     # width-2 halo on a 1-shard dim
+    assert s["total_bytes"] == 2 * 4 * 8
+    assert s["bytes_index"] == 2 * 2 * 4  # cells * elems * int32, NOT /8
+    # index-only accounting: zero payload bytes, nonzero index bytes
+    plan0 = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float64",
+                  feature_elems=0)
+    s0 = plan0.stats((6,), index_elems=2, index_itemsize=4)
+    assert s0["total_bytes"] == 0
+    assert s0["exchanged_cells"] == 2
+    assert s0["bytes_index"] == 2 * 2 * 4
+
+
+def test_plan_stats_wire_direction_aware(mesh1d):
+    """Wire accounting is per-direction: the coordinate (fwd) leg sits
+    at the float32 floor, the force return (rev) at the named format,
+    and ``wire_reduction`` compares both legs against dense."""
+    plan = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float64",
+                 feature_elems=4, wire_dtype="bfloat16")
+    s = plan.stats((6,))
+    cells = s["exchanged_cells"]
+    assert s["wire_itemsize_fwd"] == 4 and s["wire_itemsize_rev"] == 2
+    assert s["wire_bytes_fwd"] == cells * 4 * 4
+    assert s["wire_bytes_rev"] == cells * 4 * 2
+    assert s["wire_bytes"] == s["wire_bytes_fwd"] + s["wire_bytes_rev"]
+    assert s["wire_reduction"] == pytest.approx(2 * 8 / (4 + 2))
+    assert s["latency_wire"]["wire_speedup_fused"] > 1.0
+    # f32 payload: fwd rides dense (at the floor), rev still compresses
+    p32 = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float32",
+                feature_elems=4, wire_dtype="bfloat16")
+    s32 = p32.stats((6,))
+    assert s32["wire_itemsize_fwd"] == 4 and s32["wire_itemsize_rev"] == 2
+    assert s32["wire_reduction"] == pytest.approx(2 * 4 / (4 + 2))
+    # int8_ef adds one 4-byte scale per serialized message on the rev leg
+    p8 = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float64",
+               feature_elems=4, wire_dtype="int8_ef")
+    s8 = p8.stats((6,))
+    n_msgs = len([b for b in s8["serialized_pulse_bytes"] if b > 0])
+    assert s8["wire_bytes_rev"] == cells * 4 * 1 + 4 * n_msgs
+    # dense plans carry no wire block beyond the null fields
+    sd = _plan("fused", widths=(2,), mesh=mesh1d, dtype="float64",
+               feature_elems=4).stats((6,))
+    assert sd["wire_dtype"] is None
+    assert sd["wire_reduction"] == 1.0
+    assert "latency_wire" not in sd
+
+
 def test_legacy_exchange_stats_shim_warns():
     from repro.core.halo import exchange_stats
     from repro.core.schedule import make_schedule

@@ -230,3 +230,88 @@ def test_final_block_overflow_is_counted():
         assert eng.pair_stats()["inner_overflow_blocks"] == 1
     finally:
         jax.config.update("jax_enable_x64", old_x64)
+
+
+# --- compressed halo payloads (HaloSpec.wire_dtype) -------------------------
+# The drift-bounded wire-format contract (see repro.core.wire): every
+# accepted format must conserve energy at the dense-f32 level under the
+# same slab harness, and the documented over-aggressive config (plain
+# int8, no error feedback) must be rejected at build time.
+
+WIRE_CONFIGS = ("float32", "bfloat16", "float16", "int8_ef")
+
+
+@pytest.fixture(scope="module")
+def wire_nve_runs():
+    """One float64 N_STEPS run per accepted wire format (fused backend,
+    dense force path — isolates the wire's contribution to drift)."""
+    from repro.core.halo_plan import HaloSpec
+    from repro.core.md import MDEngine
+    from repro.launch.mesh import make_mesh
+
+    old_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        system = make_slab_system()
+        mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+        spec = HaloSpec(("z", "y", "x"), (1, 1, 1), backend="fused")
+        out = {}
+        for wd in (None,) + WIRE_CONFIGS:
+            eng = MDEngine(system, mesh, spec, capacity_safety=4.0,
+                           pair_bucket=8, wire_dtype=wd)
+            _, metrics, _ = eng.simulate(N_STEPS)
+            E = np.asarray(metrics["pe"]) + np.asarray(metrics["ke"])
+            out[wd] = {"E": E,
+                       "drift": float((E.max() - E.min()) / system.n_atoms)}
+        return out
+    finally:
+        jax.config.update("jax_enable_x64", old_x64)
+
+
+@pytest.mark.parametrize("wire_dtype", WIRE_CONFIGS)
+def test_wire_drift_at_dense_level(wire_nve_runs, wire_dtype):
+    """Accepted wire formats must conserve energy to the same
+    integrator-truncation level as the dense exchange: compression is
+    only legal when it does not open a new drift channel."""
+    run = wire_nve_runs[wire_dtype]
+    assert np.all(np.isfinite(run["E"])), wire_dtype
+    assert run["drift"] < DRIFT_BOUND, (wire_dtype, run["drift"])
+    d_ref = wire_nve_runs[None]["drift"]
+    assert run["drift"] <= 2 * d_ref + 1e-5, \
+        (wire_dtype, run["drift"], d_ref)
+
+
+@pytest.mark.parametrize("wire_dtype", WIRE_CONFIGS)
+def test_wire_drift_table_is_honest(wire_nve_runs, wire_dtype):
+    """The build-time gate decides from repro.core.wire.MEASURED_DRIFT;
+    this re-measurement keeps that table from going stale: the recorded
+    value must classify the format the same way the fresh run does and
+    stay within a small factor of it."""
+    from repro.core.wire import DENSE_F32_DRIFT_BOUND, MEASURED_DRIFT
+
+    measured = wire_nve_runs[wire_dtype]["drift"]
+    recorded = MEASURED_DRIFT[wire_dtype]
+    assert (measured < DENSE_F32_DRIFT_BOUND) == \
+        (recorded < DENSE_F32_DRIFT_BOUND), (measured, recorded)
+    assert recorded / 3 < measured < recorded * 3, (measured, recorded)
+
+
+def test_wire_int8_rejected_at_build():
+    """The over-aggressive config (int8 without error feedback: its
+    quantization bias accumulates, measured drift 2x over the bound) is
+    rejected when the engine builds its plan — before any step runs —
+    and the verify escape hatch still lets it be measured."""
+    from repro.core.halo_plan import HaloSpec
+    from repro.core.md import MDEngine
+    from repro.core.wire import WireDriftError
+    from repro.launch.mesh import make_mesh
+
+    system = make_slab_system(dtype=np.float32)
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+    spec = HaloSpec(("z", "y", "x"), (1, 1, 1), backend="fused")
+    with pytest.raises(WireDriftError, match="exceeds the dense-f32"):
+        MDEngine(system, mesh, spec, capacity_safety=4.0, pair_bucket=8,
+                 wire_dtype="int8")
+    with pytest.warns(RuntimeWarning, match="exceeds the dense-f32"):
+        MDEngine(system, mesh, spec, capacity_safety=4.0, pair_bucket=8,
+                 wire_dtype="int8", verify="warn")

@@ -320,6 +320,72 @@ def test_pipeline_rejects_bad_mode_and_depth():
 
 
 # --------------------------------------------------------------------------
+# wire-dtype cells: compressed halo payloads (HaloSpec.wire_dtype) must
+# preserve the off == double_buffer bitwise conformance per wire format
+# — fills encode once per step at the same cadence serial mode
+# quantizes, drains decode + splice, so regrouping steps across scan
+# iterations cannot re-round.  (float32 payloads here: the force-return
+# carries the named format; the f64 coordinate floor is covered by the
+# NVE harness and tests/dist/check_halo.py.)
+# --------------------------------------------------------------------------
+
+WIRE_MATRIX = [(wd, b, m, d)
+               for wd in ("bfloat16", "float16", "int8_ef")
+               for b in ("fused", "signal")
+               for (m, d) in (("double_buffer", 2), ("double_buffer", 3))]
+
+
+@functools.lru_cache(maxsize=None)
+def _run_wire_cell(wire, backend, mode, depth, n_steps=MATRIX_STEPS):
+    mesh = make_mesh((1,), ("z",))
+    plan = HaloPlan.build(HaloSpec(("z",), (1,), backend=backend,
+                                   wire_dtype=wire), mesh)
+    pipe = StepPipeline.build(plan, _toy_fns(), mode=mode, depth=depth)
+    x0 = jnp.asarray(np.random.RandomState(0).randn(6, 4)
+                     .astype(np.float32))
+
+    def run(state, f):
+        return pipe.run_local(state, f, n_steps, jnp.float32(0.5))
+
+    fn = shard_map_norep(run, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=(P(), P(), P(), P()))
+    state, f, metrics, _ = jax.jit(fn)(x0, jnp.zeros_like(x0))
+    return (np.asarray(state), np.asarray(f),
+            {k: np.asarray(v) for k, v in metrics.items()})
+
+
+@pytest.mark.parametrize("wire,backend,mode,depth", WIRE_MATRIX,
+                         ids=[f"{wd}-{b}-{m}-d{d}"
+                              for wd, b, m, d in WIRE_MATRIX])
+def test_wire_conformance_matrix(wire, backend, mode, depth):
+    ref = _run_wire_cell(wire, "serialized", "off", 2)
+    got = _run_wire_cell(wire, backend, mode, depth)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    for k in ref[2]:
+        np.testing.assert_array_equal(got[2][k], ref[2][k])
+
+
+def test_wire_none_trace_unchanged():
+    """wire_dtype=None must be bitwise-identical to the pre-wire
+    program (the dense path's selection happens in python, so the
+    traced computation is operand-for-operand the same)."""
+    ref = _run_cell("fused", "double_buffer", 1, 3)
+    got = _run_wire_cell(None, "fused", "double_buffer", 3)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_wire_compression_is_live():
+    """bf16 force-return must actually perturb the trajectory relative
+    to dense (guards against the wire path silently short-circuiting)."""
+    dense = _run_wire_cell(None, "fused", "off", 2)
+    comp = _run_wire_cell("bfloat16", "fused", "off", 2)
+    d = np.abs(dense[0] - comp[0]).max()
+    assert 0 < d < 1e-1, d
+
+
+# --------------------------------------------------------------------------
 # overlap + latency stats (plan-level, the ROADMAP items)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,222 @@
+"""Unit coverage for the wire-format codec seam (repro.core.wire).
+
+The int8 scale/quantize helpers are shared by the compressed-halo path
+and the DCN gradient compressor (repro.optim.compression) — one
+implementation, both wires — so the nonfinite-hardening regressions
+here exercise BOTH call sites: a NaN element must corrupt at most its
+own slot, never the whole tensor's dequant through a poisoned
+``max(|g|)`` scale, and zero tensors must round-trip to zero instead
+of dividing by zero.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wire import (
+    DENSE_F32_DRIFT_BOUND,
+    MEASURED_DRIFT,
+    WIRE_DTYPES,
+    WIRE_ITEMSIZE,
+    WireCodec,
+    WireDriftError,
+    gate_wire_config,
+    int8_dequantize,
+    int8_encode,
+    int8_quantize,
+    int8_scale,
+    make_codec,
+)
+
+
+# --------------------------------------------------------------------------
+# int8 helpers: nonfinite hardening (shared by halo wire + optim path)
+# --------------------------------------------------------------------------
+
+def test_int8_scale_ignores_nonfinite():
+    x = jnp.asarray([1.0, -3.0, np.nan, np.inf, 2.0], jnp.float32)
+    s = float(int8_scale(x))
+    assert abs(s - 3.0 / 127.0) < 1e-6      # max over FINITE entries only
+    clean = jnp.asarray([1.0, -3.0, 0.0, 0.0, 2.0], jnp.float32)
+    assert float(int8_scale(clean)) == pytest.approx(s)
+
+
+def test_int8_quantize_nan_corrupts_only_its_slot():
+    x = jnp.asarray([1.0, np.nan, -2.0, np.inf], jnp.float32)
+    q, scale, err = int8_encode(x)
+    deq = np.asarray(int8_dequantize(q, scale))
+    assert np.all(np.isfinite(deq))
+    assert deq[1] == 0.0 and deq[3] == 0.0   # nonfinite slots -> 0
+    assert abs(deq[0] - 1.0) < 0.05 and abs(deq[2] + 2.0) < 0.05
+    assert np.all(np.isfinite(np.asarray(err)))
+
+
+def test_int8_zero_tensor_roundtrips_to_zero():
+    x = jnp.zeros((7,), jnp.float32)
+    q, scale, err = int8_encode(x)
+    assert float(scale) > 0                  # epsilon floor, no div-by-0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(int8_dequantize(q, scale)), 0.0)
+    np.testing.assert_array_equal(np.asarray(err), 0.0)
+
+
+def test_int8_all_nonfinite_tensor():
+    x = jnp.full((4,), jnp.nan, jnp.float32)
+    q, scale, _ = int8_encode(x)
+    np.testing.assert_array_equal(
+        np.asarray(int8_dequantize(q, scale)), 0.0)
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_compression_call_site_survives_nonfinite(bad):
+    """The DCN gradient compressor (the other consumer of the shared
+    helpers) must reduce a tensor containing a nonfinite element to a
+    finite mean — previously one NaN poisoned every element."""
+    from repro.compat import shard_map_norep
+    from repro.launch.mesh import make_mesh
+    from repro.optim.compression import compressed_pod_mean, ef_init
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("pod",))
+    g = {"w": jnp.asarray([1.0, bad, -2.0, 0.5], jnp.float32)}
+    ef = ef_init(g)
+
+    def run(gw, efw):
+        out, new_ef = compressed_pod_mean({"w": gw}, {"w": efw}, "int8",
+                                          axis="pod")
+        return out["w"], new_ef["w"]
+
+    out, new_ef = shard_map_norep(run, mesh=mesh, in_specs=(P(), P()),
+                                  out_specs=(P(), P()))(g["w"], ef["w"])
+    out = np.asarray(out)
+    assert np.all(np.isfinite(out))
+    assert abs(out[0] - 1.0) < 0.05 and abs(out[2] + 2.0) < 0.05
+    assert np.all(np.isfinite(np.asarray(new_ef)))
+
+
+def test_compression_zero_grads():
+    from repro.compat import shard_map_norep
+    from repro.launch.mesh import make_mesh
+    from repro.optim.compression import compressed_pod_mean, ef_init
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("pod",))
+    g = jnp.zeros((5,), jnp.float32)
+
+    def run(gw, efw):
+        out, _ = compressed_pod_mean({"w": gw}, {"w": efw}, "int8",
+                                     axis="pod")
+        return out["w"]
+
+    out = shard_map_norep(run, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=P())(g, g)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# --------------------------------------------------------------------------
+# codec semantics
+# --------------------------------------------------------------------------
+
+def test_codec_fp_roundtrip_is_cast():
+    c = WireCodec("bfloat16")
+    x = jnp.asarray(np.random.RandomState(0).randn(8), jnp.float32)
+    y, ef = c.roundtrip(x)
+    assert ef is None
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(x.astype(jnp.bfloat16)
+                                  .astype(jnp.float32)))
+
+
+def test_codec_int8_ef_error_feedback_reduces_bias():
+    """Accumulated mean of EF round-trips converges to the input; the
+    same accumulation WITHOUT feedback keeps a constant bias."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(64), jnp.float32)
+    c = make_codec("int8_ef")
+    acc_ef = np.zeros(64)
+    ef = jnp.zeros_like(x)
+    plain = make_codec("int8")
+    acc_plain = np.zeros(64)
+    n = 64
+    for _ in range(n):
+        y, ef = c.roundtrip(x, ef)
+        acc_ef += np.asarray(y) / n
+        acc_plain += np.asarray(plain.roundtrip(x)[0]) / n
+    err_ef = np.abs(acc_ef - np.asarray(x)).max()
+    err_plain = np.abs(acc_plain - np.asarray(x)).max()
+    assert err_ef < 0.25 * err_plain, (err_ef, err_plain)
+
+
+def test_codec_fwd_floor():
+    c = WireCodec("int8_ef")            # named format is rev-only
+    assert c.fwd_wire_dtype(np.dtype("float64")) == "float32"
+    assert c.fwd_wire_dtype(np.dtype("float32")) is None
+    assert c.fwd_itemsize(np.dtype("float64")) == 4
+    assert c.fwd_itemsize(np.dtype("float32")) == 4
+    assert c.fwd_itemsize(np.dtype("float16")) == 2
+    old_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        x64 = jnp.asarray([1 + 1e-12], jnp.float64)
+        assert x64.dtype == jnp.float64          # not vacuously f32
+        got = c.fwd_roundtrip(x64)
+        assert float(got[0]) == float(np.float32(1 + 1e-12))
+        assert float(got[0]) != float(x64[0])    # the cast actually bites
+    finally:
+        jax.config.update("jax_enable_x64", old_x64)
+    x32 = jnp.asarray([1.25], jnp.float32)
+    assert c.fwd_roundtrip(x32) is x32  # identity at/below the floor
+
+
+def test_codec_part_shapes_match_encode():
+    for name in WIRE_DTYPES:
+        c = WireCodec(name)
+        x = jnp.ones((3, 2), jnp.float32)
+        parts, _ = c.encode(x, jnp.zeros_like(x) if c.stateful else None)
+        shapes = c.part_shapes((3, 2), np.float32)
+        assert len(parts) == len(shapes)
+        for p, (shape, dt) in zip(parts, shapes):
+            assert tuple(p.shape) == tuple(shape)
+            assert p.dtype == jnp.dtype(dt)
+
+
+def test_make_codec_rejects_unknown():
+    assert make_codec(None) is None
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        make_codec("float8")
+
+
+# --------------------------------------------------------------------------
+# the build-time drift gate
+# --------------------------------------------------------------------------
+
+def test_gate_accepts_bounded_formats():
+    for wd in ("float32", "bfloat16", "float16", "int8_ef"):
+        assert gate_wire_config(wd) == MEASURED_DRIFT[wd]
+    assert gate_wire_config(None) is None
+
+
+def test_gate_rejects_over_bound_format():
+    assert MEASURED_DRIFT["int8"] > DENSE_F32_DRIFT_BOUND  # table honest
+    with pytest.raises(WireDriftError, match="exceeds the dense-f32"):
+        gate_wire_config("int8")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        gate_wire_config("int8", verify="warn")
+    assert any(issubclass(x.category, RuntimeWarning) for x in w)
+    gate_wire_config("int8", verify="off")      # escape hatch
+
+
+def test_gate_unknown_format_always_raises():
+    for verify in ("error", "warn", "off"):
+        with pytest.raises(ValueError, match="unknown wire_dtype"):
+            gate_wire_config("float8", verify=verify)
+    with pytest.raises(ValueError, match="unknown verify mode"):
+        gate_wire_config("bfloat16", verify="maybe")
+
+
+def test_wire_itemsize_table_complete():
+    assert set(WIRE_ITEMSIZE) == set(WIRE_DTYPES) == set(MEASURED_DRIFT)
