@@ -659,6 +659,110 @@ def resilience_bench(smoke: bool = False, out: str = None):
     emit("resilience/cells", 0.0, str(len(cells)))
 
 
+def serve_bench(smoke: bool = False, out: str = None):
+    """SimServer continuous-batching suite -> ``BENCH_serve.json``.
+
+    Two cells at 16 replicas on the CPU harness: ``solo`` runs
+    one-engine-per-replica (16 engine builds, 16 traced lowerings — the
+    no-server baseline), ``simserver`` serves the same 16 replicas
+    through one bucketed vmapped program (1 compile, continuous
+    admission).  Both walls include compilation; that *is* the
+    comparison — bucketing exists to amortize traces across replicas.
+    The ``summary`` cell records the headline replicas/sec speedup and
+    the ``meets_2x`` acceptance bit (exact-gated: the observed margin is
+    ~10x, so a flip means the batching broke, not noise).  p50/p99
+    per-step latency ride the timing-factor envelope.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.core.md import MDEngine, make_grappa_like
+    from repro.launch.mesh import make_mesh
+    from repro.obs import SCHEMA_VERSION
+    from repro.serve import SimServer
+
+    n_replicas, n_atoms, n_steps, nst = 16, 150, 20, 10
+    mesh = make_mesh((1, 1, 1), ("z", "y", "x"))
+
+    def replica(i):
+        return make_grappa_like(n_atoms, seed=i, nstlist=nst,
+                                box_atoms=192)
+
+    cells = []
+
+    def add_cell(mode, wall, step_walls, compiles, buckets, extra=None):
+        sw = np.asarray(step_walls, np.float64)
+        cell = {"mode": mode, "n_replicas": n_replicas,
+                "n_atoms": n_atoms, "atom_bucket": 192,
+                "n_steps": n_steps,
+                "total_steps": n_replicas * n_steps,
+                "compiles": int(compiles), "buckets": int(buckets),
+                "wall_s": wall,
+                "replicas_per_s": n_replicas / max(wall, 1e-9),
+                "ms_per_replica": wall * 1e3 / n_replicas,
+                "ms_per_step_p50": float(np.percentile(sw, 50) * 1e3),
+                "ms_per_step_p99": float(np.percentile(sw, 99) * 1e3),
+                **(extra or {})}
+        cells.append(cell)
+        emit(f"serve/{mode}", wall * 1e6 / n_replicas,
+             f"replicas_per_s={cell['replicas_per_s']:.3f};"
+             f"compiles={compiles};p50={cell['ms_per_step_p50']:.2f}ms")
+        return cell
+
+    # one-engine-per-replica baseline: every replica pays its own build
+    # + trace; per-step latency sampled per replica
+    t0 = _time.perf_counter()
+    solo_steps = []
+    for i in range(n_replicas):
+        eng = MDEngine(replica(i), mesh, layout_atoms=192)
+        t1 = _time.perf_counter()
+        (_cf, _ci), _, _ = eng.simulate(n_steps, collect=False)
+        jax.block_until_ready(_ci)
+        solo_steps.append((_time.perf_counter() - t1) / n_steps)
+    solo_wall = _time.perf_counter() - t0
+    solo = add_cell("solo", solo_wall, solo_steps,
+                    compiles=n_replicas, buckets=0)
+
+    # SimServer: one bucketed vmapped program, continuous admission
+    t0 = _time.perf_counter()
+    srv = SimServer(mesh, block_steps=nst)
+    handles = [srv.submit(replica(i), n_steps)
+               for i in range(n_replicas)]
+    srv.drain()
+    srv_wall = _time.perf_counter() - t0
+    st = srv.stats()
+    assert all(h.status == "done" for h in handles)
+    served = add_cell("simserver", srv_wall, srv._step_walls,
+                      st["compiles"], len(st["shapes_touched"]))
+
+    speedup = served["replicas_per_s"] / max(solo["replicas_per_s"], 1e-9)
+    cells.append({"mode": "summary", "n_replicas": n_replicas,
+                  "speedup_replicas_per_s": speedup,
+                  "meets_2x": bool(speedup >= 2.0)})
+    emit("serve/speedup", 0.0, f"{speedup:.2f}x;meets_2x={speedup >= 2.0}")
+
+    doc = {
+        "suite": "serve",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": smoke,
+        "cells": cells,
+        "gate": {
+            # serve cells are keyed on serving mode at a replica count
+            "key_fields": ["mode", "n_replicas"],
+            "exact": ["n_atoms", "atom_bucket", "n_steps", "total_steps",
+                      "compiles", "buckets", "meets_2x"],
+            "rel_tol": {},
+            "timing_factor": 10.0,
+            "timing_keys": ["ms_per_replica", "ms_per_step_p50",
+                            "ms_per_step_p99"],
+        },
+    }
+    path = Path(out) if out else RESULTS / "BENCH_serve.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1))
+
+
 ALL = {
     "fig3": fig3_intranode_strong_scaling,
     "fig5": fig5_multinode_critical_path,
@@ -669,4 +773,5 @@ ALL = {
     "pipeline": pipeline_bench,
     "halo_wire": halo_wire_bench,
     "resilience": resilience_bench,
+    "serve": serve_bench,
 }

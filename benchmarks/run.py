@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run --suite pipeline --smoke \
       [--out results/BENCH_pipeline.current.json]
   PYTHONPATH=src python -m benchmarks.run --suite resilience --smoke
+  PYTHONPATH=src python -m benchmarks.run --suite serve --smoke
 
 Default mode is quick (CI-sized); --full runs the complete sweeps.
 ``--suite nb`` runs the NB force-engine suite (dense vs sparse vs pallas
@@ -33,13 +34,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--suite", default=None,
                     choices=("paper", "nb", "pipeline", "halo_wire",
-                             "resilience"),
+                             "resilience", "serve"),
                     help="named suite: 'nb' = force-engine bench "
                          "(BENCH_nb.json), 'pipeline' = perf-trajectory "
                          "bench (BENCH_pipeline.json), 'resilience' = "
                          "fault-recovery bench (BENCH_resilience.json), "
                          "'halo_wire' = compressed-wire bench "
-                         "(BENCH_halo_wire.json), "
+                         "(BENCH_halo_wire.json), 'serve' = SimServer "
+                         "continuous-batching bench (BENCH_serve.json), "
                          "'paper' = all figures")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized suite variant (implies quick mode)")
@@ -47,13 +49,15 @@ def main() -> None:
                     help="override the pipeline suite's output file")
     args = ap.parse_args()
 
-    if args.suite in ("nb", "pipeline", "halo_wire", "resilience"):
+    if args.suite in ("nb", "pipeline", "halo_wire", "resilience",
+                      "serve"):
         names = [args.suite]
     elif args.only:
         names = args.only.split(",")
     else:
         names = [n for n in ALL
-                 if n not in ("nb", "pipeline", "halo_wire", "resilience")]
+                 if n not in ("nb", "pipeline", "halo_wire", "resilience",
+                              "serve")]
     print("name,us_per_call,derived")
     for name in names:
         fn = ALL[name]
@@ -61,7 +65,7 @@ def main() -> None:
         try:
             if name == "nb":
                 fn(smoke=args.smoke or not args.full)
-            elif name in ("pipeline", "halo_wire", "resilience"):
+            elif name in ("pipeline", "halo_wire", "resilience", "serve"):
                 fn(smoke=args.smoke or not args.full, out=args.out)
             elif name in ("fig3", "fig6", "lm"):
                 fn(quick=not args.full)

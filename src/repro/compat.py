@@ -67,6 +67,34 @@ def set_mesh(mesh):
     return contextlib.nullcontext(mesh) if mesh is None else mesh
 
 
+def ensure_barrier_batching() -> bool:
+    """Register a vmap batching rule for ``lax.optimization_barrier``.
+
+    jax 0.4.x ships no batching rule for the barrier primitive, which
+    blocks ``vmap`` over any barrier-pinned program — including every MD
+    block body (the SimServer stacks replicas exactly that way).  The
+    barrier is semantically an elementwise identity, so the rule is the
+    identity on batch dims: bind the batched operands, pass the dims
+    through.  Idempotent; returns False when the private primitive
+    handle is unreadable (callers then know vmap-of-blocks is
+    unavailable on this jax).
+    """
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as _lax_internal
+        prim = _lax_internal.optimization_barrier_p
+    except (ImportError, AttributeError):  # pragma: no cover - jax drift
+        return False
+    if prim in batching.primitive_batchers:
+        return True
+
+    def _rule(args, dims, **params):
+        return prim.bind(*args, **params), dims
+
+    batching.primitive_batchers[prim] = _rule
+    return True
+
+
 def named_axes_in_scope():
     """Mesh axis names bound by enclosing shard_maps at trace time.
 

@@ -149,7 +149,9 @@ class MDEngine:
                  wire_dtype: str | None = None,
                  verify: str = "error",
                  obs=None, trace: bool = False,
-                 inject: bool = False, health: bool = False):
+                 inject: bool = False, health: bool = False,
+                 layout_atoms: int | None = None,
+                 static_ladder: bool = False):
         if spec is None:
             spec = HaloSpec(axis_names=AXES, widths=(1, 1, 1))
         if spec.axis_names != tuple(AXES):
@@ -194,7 +196,8 @@ class MDEngine:
             capacity_safety=capacity_safety, nstprune=nstprune,
             inner_radius=inner_radius, inner_safety=inner_safety,
             pair_bucket=pair_bucket, wire_dtype=wire_dtype, verify=verify,
-            obs=obs, trace=trace, inject=inject, health=health)
+            obs=obs, trace=trace, inject=inject, health=health,
+            layout_atoms=layout_atoms, static_ladder=static_ladder)
         self.system = system
         self.mesh = mesh
         self.pipeline_mode = pipeline
@@ -202,8 +205,15 @@ class MDEngine:
         self.overlap_rebin = bool(overlap_rebin)
         mesh_shape = tuple(mesh.shape[a] for a in AXES)
         r_list = system.params.ff.r_cut * r_list_factor
+        # ``layout_atoms`` sizes the cell capacity as if the system held
+        # that many atoms — the SimServer bucket contract: every replica
+        # of one (n_replicas, n_atoms_bucket) bucket shares the bucket's
+        # layout, so a sub-bucket replica's solo reference run uses the
+        # exact array shapes (and op sequence) of its batched row
+        self.layout_atoms = int(layout_atoms) if layout_atoms else None
         self.layout = choose_layout(system.box, mesh_shape, r_list,
-                                    system.n_atoms, safety=capacity_safety)
+                                    self.layout_atoms or system.n_atoms,
+                                    safety=capacity_safety)
         if force_backend != "dense" and min(self.layout.global_cells) < 2:
             # tiny-box path: a pair schedule cannot distinguish a halo
             # cell from its own periodic image here; fall back to the
@@ -217,6 +227,21 @@ class MDEngine:
         self.force_backend = force_backend
         if force_backend == "dense":
             nstprune = 0               # dual list rides the pair schedule
+        # ``static_ladder``: the pruned backends execute a DATA-INDEPENDENT
+        # worst-case tier ladder (every worklist row at the deepest level)
+        # instead of the measured histogram's.  Exec shapes then depend on
+        # the layout alone — the property the SimServer's no-recompile-at-
+        # admission contract and its replica isolation both rest on: a
+        # replica's ladder can neither retrace the block program nor leak
+        # information about co-resident replicas.  The prune still runs
+        # (``sel`` masks dropped pairs with the inert sentinel), so the
+        # physics is unchanged; only the padding accounting grows.
+        self.static_ladder = bool(static_ladder)
+        if self.static_ladder and int(nstprune):
+            raise ValueError(
+                "static_ladder=True is incompatible with nstprune: the "
+                "rolling inner prune exists to shrink the measured ladder "
+                "the static ladder deliberately ignores")
         self.nstprune = int(nstprune)
         self.inner_safety = float(inner_safety)
         # pair-count quantum of the tier ladders: smaller = tighter exec
@@ -627,6 +652,17 @@ class MDEngine:
             occ = lax.pmax(occ, AXES)
             return sel[None, None, None], cum, cum_inner, occ
 
+        # device-local program bodies, exposed for external composition:
+        # repro.serve.SimServer wraps these in vmap under its own
+        # shard_map to stack independent replicas into one bucketed
+        # block program (each vmap lane runs this exact op sequence, so
+        # a batched row's trajectory stays bitwise-identical to a solo
+        # run of the same engine config)
+        self.local_programs = {
+            "block": block, "block_sched": block_sched,
+            "rebin": do_rebin, "prune": do_prune,
+        }
+
         # overlap_rebin: the nstlist-cadence DLB work (migration gather +
         # occupancy/bbox prune) fused into the block program's final
         # region instead of host-dispatched between blocks.  The seam is
@@ -748,9 +784,14 @@ class MDEngine:
 
     # ---- state init ----------------------------------------------------------
 
-    def init_state(self):
-        """Bin the global system into the stacked global cell arrays."""
-        sys, layout = self.system, self.layout
+    def bin_host(self, system: MDSystem | None = None):
+        """Host-side binning of a system into numpy cell arrays.
+
+        Defaults to the engine's own system; passing another system bins
+        it under THIS engine's layout (the SimServer admission path: a
+        replica whose box matches the bucket's is binned into the bucket
+        shapes before being written into a batch row)."""
+        sys, layout = system or self.system, self.layout
         G = layout.global_cells
         K = layout.capacity
         cs = np.asarray(layout.cell_size)
@@ -773,7 +814,11 @@ class MDEngine:
         cell_f[gz, gy, gx, rank, 4:7] = np.asarray(sys.vel)[order]
         cell_i[gz, gy, gx, rank, 0] = np.arange(sys.n_atoms)[order]
         cell_i[gz, gy, gx, rank, 1] = np.asarray(sys.typ)[order]
+        return cell_f, cell_i
 
+    def init_state(self):
+        """Bin the global system into the stacked global cell arrays."""
+        cell_f, cell_i = self.bin_host()
         shard = NamedSharding(self.mesh, self._spec)
         return (jax.device_put(jnp.asarray(cell_f), shard),
                 jax.device_put(jnp.asarray(cell_i), shard))
@@ -806,6 +851,11 @@ class MDEngine:
         cum = [int(v) for v in jax.device_get(cum)]
         cum_inner = [int(v) for v in jax.device_get(cum_inner)]
         occ = int(jax.device_get(occ))
+        n_keep = cum[0]                 # measured survivors (stats stay honest)
+        if self.static_ladder:
+            # worst-case histogram: all M rows at the deepest level — one
+            # (M, K) tier, constant across blocks and across replicas
+            cum = [M] * len(cum)
         tiers = tier_plan(cum, self.pair_bucket, M, SLOT_QUANTUM, K)
         tiers_inner = ()
         if self.nstprune and not disable_inner:
@@ -820,7 +870,7 @@ class MDEngine:
         global_kexec = bucket(cum[0], self.pair_bucket, M) * \
             bucket(occ, SLOT_QUANTUM, K) ** 2 if cum[0] else 0
         self._pair_stats = self.pair_schedule.slot_pair_stats(
-            tiers=tiers, tiers_inner=tiers_inner, n_keep=cum[0],
+            tiers=tiers, tiers_inner=tiers_inner, n_keep=n_keep,
             n_inner=cum_inner[0], max_occupancy=occ,
             global_kexec_slot_pairs=global_kexec)
         self._pair_stats.update({
@@ -965,7 +1015,8 @@ class MDEngine:
         rs.disable = False
         rs.diags.append(jax.device_get(diag))
 
-    def simulate(self, n_steps: int, state=None, collect=True):
+    def simulate(self, n_steps: int, state=None, collect=True,
+                 on_boundary=None):
         """Run n_steps in nstlist-sized TPU-resident blocks.
 
         With ``overlap_rebin`` every block that another block follows is
@@ -975,8 +1026,22 @@ class MDEngine:
         states and the host still reads only the prune histograms (two
         small per-level vectors + occupancy + overflow scalars) per
         block boundary.
+
+        ``on_boundary`` is the block-boundary admission hook: called as
+        ``on_boundary(rs)`` at every interior block boundary, BEFORE the
+        boundary rebin — the host-visible point the SimServer admits and
+        retires replicas at.  The hook may mutate ``rs.cell_f`` /
+        ``rs.cell_i`` in place; the boundary rebin that follows
+        re-derives the force carry and pair schedule from whatever state
+        it finds, so mutated atoms never run under a stale schedule.
+        (First-block admission is the ``state`` argument itself.)
         """
         nst = self.system.params.nstlist
+        if on_boundary is not None and self.overlap_rebin:
+            raise ValueError(
+                "on_boundary is incompatible with overlap_rebin: the "
+                "fused block carries its own rebin, so a boundary "
+                "mutation would run under the already-derived schedule")
         rs = self.begin_run(state)
         all_metrics = []
         while rs.step < n_steps:
@@ -986,6 +1051,8 @@ class MDEngine:
             if collect:
                 all_metrics.append(jax.device_get(m))
             if not fuse and rs.step < n_steps:
+                if on_boundary is not None:
+                    on_boundary(rs)
                 self.advance_schedule(rs)
         cell_f, cell_i, diags = rs.cell_f, rs.cell_i, rs.diags
         metrics = {}

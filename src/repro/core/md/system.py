@@ -75,16 +75,23 @@ def make_grappa_like(n_atoms: int, density: float = 0.78,
                      temperature: float = 1.0, charge_mag: float = 0.25,
                      ethanol_fraction: float = 0.2, seed: int = 0,
                      dtype=np.float32, ff: ForceField = DEFAULT_FF,
-                     dt: float = 0.002, nstlist: int = 20) -> MDSystem:
+                     dt: float = 0.002, nstlist: int = 20,
+                     box_atoms: int | None = None) -> MDSystem:
     """Build a charge-neutral two-type fluid on a jittered FCC-ish lattice.
 
     Lattice start avoids overlaps (stable from step 0); velocities are
     Maxwell-Boltzmann with the center-of-mass motion removed, as GROMACS
     does at generation time.
+
+    ``box_atoms`` sizes the box as if the system held that many atoms (at
+    the same density), while only ``n_atoms`` are actually placed — the
+    SimServer bucket contract: every replica of an ``n_atoms_bucket``
+    shares the bucket's canonical box (hence cell layout), and sub-bucket
+    replicas simply run more dilute.
     """
     rng = np.random.RandomState(seed)
     # cubic box from density
-    L = (n_atoms / density) ** (1.0 / 3.0)
+    L = ((box_atoms or n_atoms) / density) ** (1.0 / 3.0)
     box = np.array([L, L, L], dtype=np.float64)
 
     # simple-cubic lattice with jitter, then trim to n_atoms

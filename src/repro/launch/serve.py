@@ -1,7 +1,10 @@
-"""Serving launcher: batched waves of synthetic requests.
+"""Serving launcher: batched LM waves, or continuous MD batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --requests 16 --batch 4 --new-tokens 16
+
+  PYTHONPATH=src python -m repro.launch.serve --md \
+      --replicas 16 --atoms 200 --steps 40 --backend dense
 """
 from __future__ import annotations
 
@@ -18,9 +21,37 @@ from repro.parallel.sharding import ShardingCtx
 from repro.runtime.serve_loop import BatchServer, Request, throughput_stats
 
 
+def main_md(args):
+    """Continuous batching of MD replicas (the SimServer subsystem)."""
+    from repro.core.md.domain import AXES
+    from repro.core.md.system import make_grappa_like
+    from repro.launch.mesh import make_mesh as mk
+    from repro.serve import BucketLadder, SimServer
+
+    mesh = mk((1, 1, 1), AXES)
+    ladder = BucketLadder()
+    server = SimServer(mesh, ladder, block_steps=args.nstlist,
+                       engine_kwargs={"force_backend": args.backend})
+    bucket = ladder.atom_bucket_for(args.atoms)
+    handles = [server.submit(
+        make_grappa_like(args.atoms, seed=i, nstlist=args.nstlist,
+                         box_atoms=bucket), args.steps)
+        for i in range(args.replicas)]
+    server.drain()
+    stats = server.stats()
+    print(f"served {stats['replicas_done']} replicas "
+          f"({stats['useful_steps']} useful steps) in "
+          f"{stats['wall_s']:.3f}s -> {stats['replicas_per_s']:.2f} "
+          f"replicas/s; {stats['compiles']} compiles over shapes "
+          f"{stats['shapes_touched']}; step latency "
+          f"p50={stats['step_latency_p50_ms']:.3f}ms "
+          f"p99={stats['step_latency_p99_ms']:.3f}ms")
+    assert all(h.status == "done" for h in handles)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
@@ -28,7 +59,19 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--md", action="store_true",
+                    help="serve MD replicas (SimServer) instead of LM waves")
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--atoms", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--nstlist", type=int, default=10)
+    ap.add_argument("--backend", default="dense",
+                    choices=("dense", "sparse"))
     args = ap.parse_args()
+    if args.md:
+        return main_md(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --md")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -30,6 +30,21 @@ class Request:
     max_new_tokens: int
     out_tokens: Optional[np.ndarray] = None
     latency_s: float = 0.0
+    wave: int = -1                # which wave served it (-1 = not served)
+
+
+def masked_tokens(decoded, budgets) -> int:
+    """Useful work across padded rows: ``sum(min(decoded_i, budget_i))``.
+
+    Batched programs run every row to the padded maximum — a finished or
+    short-budget row still *executes* decode steps (or MD block steps),
+    but only the requested budget is useful.  Throughput accounting must
+    mask the padding out or tok/s (and the SimServer's replica-steps/s)
+    overcounts.  Shared by :func:`throughput_stats` and
+    ``SimServer`` replica-step accounting.
+    """
+    return int(sum(max(0, min(int(d), int(b)))
+                   for d, b in zip(decoded, budgets)))
 
 
 class BatchServer:
@@ -92,10 +107,11 @@ class BatchServer:
         dt = time.time() - t0
         if self.watchdog is not None:
             self.watchdog.observe(self._waves, dt)
-        self._waves += 1
         for i, r in enumerate(requests):
             r.out_tokens = outs[i, : r.max_new_tokens]
             r.latency_s = dt
+            r.wave = self._waves
+        self._waves += 1
         return requests
 
     def _sample(self, logits):
@@ -108,7 +124,21 @@ class BatchServer:
 
 
 def throughput_stats(requests: List[Request]) -> Dict[str, float]:
-    tot_tokens = sum(int(r.out_tokens.shape[0]) for r in requests)
-    wall = max(r.latency_s for r in requests)
-    return {"tokens": tot_tokens, "wall_s": wall,
-            "tok_per_s": tot_tokens / max(wall, 1e-9)}
+    """Token throughput over any mix of served requests.
+
+    Tokens are budget-masked (:func:`masked_tokens`): padded decode
+    steps past a request's ``max_new_tokens`` never count.  Wall time is
+    wave-aware: requests in one wave share a wave latency (take the max
+    within the wave), and the serving wall is the *sum over distinct
+    waves* — the old ``max`` over all requests counted only the longest
+    single wave and overstated tok/s for multi-wave request sets.
+    """
+    served = [r for r in requests if r.out_tokens is not None]
+    tokens = masked_tokens((r.out_tokens.shape[0] for r in served),
+                           (r.max_new_tokens for r in served))
+    per_wave: Dict[int, float] = {}
+    for r in served:
+        per_wave[r.wave] = max(per_wave.get(r.wave, 0.0), r.latency_s)
+    wall = sum(per_wave.values())
+    return {"tokens": tokens, "wall_s": wall,
+            "tok_per_s": tokens / max(wall, 1e-9)}

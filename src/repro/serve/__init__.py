@@ -1,0 +1,28 @@
+"""Continuous batching of many MD replicas (the SimServer subsystem).
+
+Client side::
+
+    server = SimServer(mesh, BucketLadder(), block_steps=10,
+                       engine_kwargs={"force_backend": "sparse"})
+    h = server.submit(make_grappa_like(200, box_atoms=256, nstlist=10,
+                                       seed=3), n_steps=40)
+    out = h.result()          # bitwise == a solo MDEngine run
+
+See :mod:`repro.serve.sim_server` for the isolation contract and
+:mod:`repro.serve.scheduler` for the admission/retirement invariants.
+"""
+from repro.serve.buckets import (Bucket, BucketLadder, DEFAULT_ATOM_BUCKETS,
+                                 DEFAULT_ROW_BUCKETS, padding_waste)
+from repro.serve.scheduler import (Admission, CANCELLED, DONE, FAILED,
+                                   PREEMPTED, QUEUED, RUNNING, ReplicaRecord,
+                                   SimScheduler, TERMINAL)
+from repro.serve.sim_server import ReplicaFault, ReplicaHandle, SimServer
+
+__all__ = [
+    "Bucket", "BucketLadder", "DEFAULT_ROW_BUCKETS", "DEFAULT_ATOM_BUCKETS",
+    "padding_waste",
+    "Admission", "ReplicaRecord", "SimScheduler",
+    "QUEUED", "RUNNING", "DONE", "CANCELLED", "FAILED", "PREEMPTED",
+    "TERMINAL",
+    "SimServer", "ReplicaHandle", "ReplicaFault",
+]

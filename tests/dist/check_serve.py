@@ -1,0 +1,116 @@
+"""8-virtual-device SimServer checks: rep-sharded rows, quarantine,
+device loss.
+
+Three cells:
+
+1. **rep-sharded rows** — an 8-row bucket sharded across a
+   ``("rep", z, y, x) = (8, 1, 1, 1)`` mesh (one replica lane per
+   device): all 8 mixed-size replicas must be bitwise-identical to solo
+   single-device runs.
+2. **quarantine** — a poisoned lane (inf velocity) among 7 healthy ones
+   on the sharded mesh: the poisoned replica retires FAILED with a typed
+   ReplicaFault; a co-resident stays bitwise.
+3. **device loss** — serve 2 of 4 blocks on the rep=8 mesh, evacuate,
+   rebuild the server on a rep=4 mesh (half the devices "lost"), readmit
+   every snapshot, and the stitched trajectories must equal
+   uninterrupted solo runs — continuous batching's elastic-shrink path.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python tests/dist/check_serve.py
+"""
+import numpy as np
+
+import jax
+
+from repro.core.md.engine import MDEngine
+from repro.core.md.system import make_grappa_like
+from repro.launch.mesh import make_mesh
+from repro.serve import BucketLadder, FAILED, PREEMPTED, SimServer
+
+AXES = ("z", "y", "x")
+NST = 10
+BUCKET = 256
+SIZES = (200, 256, 230, 210, 256, 240, 224, 250)
+
+
+def _sys(n, seed):
+    return make_grappa_like(n, seed=seed, nstlist=NST, box_atoms=BUCKET)
+
+
+def _solo(n, seed, n_steps):
+    eng = MDEngine(_sys(n, seed), make_mesh((1, 1, 1), AXES),
+                   force_backend="dense", layout_atoms=BUCKET)
+    (cf, ci), _, _ = eng.simulate(n_steps)
+    return (np.asarray(jax.device_get(cf)), np.asarray(jax.device_get(ci)))
+
+
+def _server(mesh, rows):
+    return SimServer(mesh, BucketLadder(row_buckets=rows,
+                                        atom_buckets=(BUCKET,)),
+                     block_steps=NST,
+                     engine_kwargs={"force_backend": "dense"})
+
+
+def main():
+    assert len(jax.devices()) >= 8, "need 8 virtual devices"
+    mesh8 = make_mesh((8, 1, 1, 1), ("rep",) + AXES)
+
+    # --- cell 1: rep-sharded rows, one lane per device -----------------
+    srv = _server(mesh8, rows=(8,))
+    handles = [srv.submit(_sys(n, seed=i), 20)
+               for i, n in enumerate(SIZES)]
+    srv.drain()
+    for i, (n, h) in enumerate(zip(SIZES, handles)):
+        out = h.result()
+        cf, ci = _solo(n, i, 20)
+        assert np.array_equal(out["cell_f"], cf), f"lane {i} cell_f diff"
+        assert np.array_equal(out["cell_i"], ci), f"lane {i} cell_i diff"
+    st = srv.stats()
+    assert st["compiles"] == 1 and st["replicas_done"] == 8
+    print("rep-sharded rows: 8/8 replicas bitwise vs solo "
+          f"(1 compile, {st['blocks']} blocks)")
+
+    # --- cell 2: quarantine on the sharded mesh ------------------------
+    srv = _server(mesh8, rows=(8,))
+    bad_sys = _sys(200, seed=99)
+    bad_sys.vel[0] = np.inf
+    handles = [srv.submit(_sys(n, seed=i), 20)
+               for i, n in enumerate(SIZES[:7])]
+    h_bad = srv.submit(bad_sys, 20)
+    srv.drain()
+    assert h_bad.status == FAILED
+    for i, (n, h) in enumerate(zip(SIZES[:7], handles)):
+        out = h.result()
+        cf, ci = _solo(n, i, 20)
+        assert np.array_equal(out["cell_f"], cf), f"co-resident {i} diff"
+    print("quarantine: co-residents bitwise around a poisoned lane "
+          "(typed ReplicaFault, batch kept serving)")
+
+    # --- cell 3: device loss -> evacuate -> resume on rep=4 ------------
+    srv = _server(mesh8, rows=(8,))
+    systems = [_sys(n, seed=i) for i, n in enumerate(SIZES)]
+    for s in systems:
+        srv.submit(s, 40)
+    srv.run_cycle()
+    srv.run_cycle()                      # 2 of 4 blocks served
+    snaps = srv.evacuate()
+    assert len(snaps) == 8
+    assert all(h.status == PREEMPTED and s["remaining_steps"] == 20
+               for h, s in snaps)
+    mesh4 = make_mesh((4, 1, 1, 1), ("rep",) + AXES)
+    srv2 = _server(mesh4, rows=(8,))     # 8 rows / 4 devices: 2 lanes each
+    resumed = [srv2.submit(systems[i], snap["remaining_steps"],
+                           state=(snap["cell_f"], snap["cell_i"]))
+               for i, (_h, snap) in enumerate(snaps)]
+    srv2.drain()
+    for i, (n, h) in enumerate(zip(SIZES, resumed)):
+        out = h.result()
+        cf, ci = _solo(n, i, 40)
+        assert np.array_equal(out["cell_f"], cf), f"resumed {i} cell_f diff"
+        assert np.array_equal(out["cell_i"], ci), f"resumed {i} cell_i diff"
+    print("device-loss: evacuated replicas resumed bitwise on rep=4 "
+          "(8 -> 4 devices, 2 lanes/device)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ from repro.launch.mesh import make_mesh
 from repro.models import build_model
 from repro.parallel.sharding import ShardingCtx
 from repro.resilience import Watchdog, WaveTimeout
-from repro.runtime.serve_loop import BatchServer, Request, throughput_stats
+from repro.runtime.serve_loop import (BatchServer, Request, masked_tokens,
+                                      throughput_stats)
 
 
 @pytest.fixture(scope="module")
@@ -73,6 +74,45 @@ def test_generous_timeout_does_not_fire_and_watchdog_observes(served):
         out = server.serve_wave([req])
         assert out[0].out_tokens.shape == (3,)
     assert wd.n == 2 and wd.events == 0      # one observation per wave
+
+
+def test_throughput_masks_padding_and_sums_waves():
+    """Regression for the wave throughput overcount: padded decode rows
+    beyond a request's budget must not count as tokens, and the serving
+    wall must cover *every* wave, not just the longest one."""
+    def fake(budget, decoded, wave, latency):
+        return Request(prompt=np.zeros(1, np.int32), max_new_tokens=budget,
+                       out_tokens=np.zeros(decoded, np.int32), wave=wave,
+                       latency_s=latency)
+
+    reqs = [fake(5, 5, 0, 1.0),      # wave 0: padded to 5 new tokens
+            fake(3, 5, 0, 1.0),      #   3-budget row decoded 5 -> count 3
+            fake(4, 4, 1, 2.0),      # wave 1
+            Request(prompt=np.zeros(1, np.int32), max_new_tokens=9)]
+    stats = throughput_stats(reqs)   # unserved request is ignored
+    assert stats["tokens"] == 5 + 3 + 4
+    assert stats["wall_s"] == pytest.approx(3.0)   # 1.0 + 2.0, not max
+    assert stats["tok_per_s"] == pytest.approx(12 / 3.0)
+    assert masked_tokens([5, 5, 4], [5, 3, 4]) == 12
+
+
+def test_multi_wave_mixed_budgets_end_to_end(served):
+    """Two real waves with mixed max_new_tokens: per-request outputs are
+    budget-trimmed and the summed stats stay wave-aware."""
+    cfg, model, params = served
+    rng = np.random.RandomState(4)
+    server = BatchServer(model, params, batch_size=2, max_len=32)
+    def req(budget):
+        return Request(prompt=rng.randint(0, cfg.vocab, size=(4,))
+                       .astype(np.int32), max_new_tokens=budget)
+    done = server.serve_wave([req(6), req(2)])    # padded to 6 decodes
+    done += server.serve_wave([req(3)])
+    assert [r.wave for r in done] == [0, 0, 1]
+    assert [r.out_tokens.shape[0] for r in done] == [6, 2, 3]
+    stats = throughput_stats(done)
+    assert stats["tokens"] == 11                  # not 6+6+3
+    assert stats["wall_s"] == pytest.approx(
+        done[0].latency_s + done[2].latency_s)
 
 
 def test_temperature_sampling_changes_output(served):

@@ -1,0 +1,172 @@
+"""SimScheduler admission-churn properties (hypothesis sweep).
+
+The scheduler is pure host bookkeeping — no jax — so random
+arrival/cancel/retirement sequences are cheap to drive end to end.  The
+locked invariants (the ones the SimServer's bitwise isolation sits on):
+
+* every admitted replica fits its bucket (atoms ≤ rung, row < rows);
+* FIFO within an atom bucket — admission order equals submission order
+  (minus cancelled-in-queue), so no replica starves;
+* the set of shapes ever opened stays inside the ladder grid, hence
+  distinct compiled shapes ≤ ``ladder.n_buckets``;
+* a finished/faulted/cancelled replica's row is free again by the next
+  boundary (release precedes the next tick), and every submission
+  reaches a terminal state in bounded boundaries.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; hypothesis is a dev extra
+    from _hypothesis_stub import given, settings, st
+
+from repro.serve import (BucketLadder, CANCELLED, DONE, FAILED,
+                         SimScheduler, TERMINAL)
+
+LADDER = BucketLadder(row_buckets=(1, 2, 4), atom_buckets=(64, 128, 256))
+BLOCK = 10
+
+
+def _drive(ops, fault_every=0):
+    """Run a random op sequence to quiescence; return the evidence."""
+    sched = SimScheduler(LADDER, block_steps=BLOCK)
+    submit_order = {a: [] for a in LADDER.atom_buckets}
+    admit_order = {a: [] for a in LADDER.atom_buckets}
+    live_rids = []
+
+    def boundary():
+        for adm in sched.tick():
+            rec = sched.records[adm.rid]
+            rows, atoms = adm.shape
+            # fits-its-bucket invariant, checked at the admission edge
+            assert rec.n_atoms <= atoms
+            assert 0 <= adm.row < rows
+            assert adm.shape in {(r, a) for r in LADDER.row_buckets
+                                 for a in LADDER.atom_buckets}
+            admit_order[atoms].append(adm.rid)
+        for shape in sched.live_shapes():
+            sched.advance(shape)
+            if fault_every:
+                for _, rid in sched.occupants(shape):
+                    if rid % fault_every == 0:
+                        sched.mark_fault(rid, RuntimeError("boom"))
+            for rid in sched.finished(shape):
+                sched.release(rid)
+                # slot freed by this boundary: the row reads empty
+                assert all(r != rid for row in sched.tables.values()
+                           for r in row)
+
+    for kind, a, b in ops:
+        if kind == "submit":
+            rid = sched.submit(n_atoms=a, n_steps=b)
+            submit_order[sched.records[rid].atom_bucket].append(rid)
+            live_rids.append(rid)
+        elif kind == "cancel" and live_rids:
+            sched.cancel(live_rids[a % len(live_rids)])
+        else:
+            boundary()
+
+    for _ in range(200):               # bounded drain: no starvation
+        if all(sched.records[r].status in TERMINAL for r in live_rids):
+            break
+        boundary()
+    else:
+        pytest.fail("scheduler failed to drain in 200 boundaries")
+    return sched, submit_order, admit_order
+
+
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(1, 256),
+                  st.integers(1, 45)),
+        st.tuples(st.just("cancel"), st.integers(0, 63), st.just(0)),
+        st.tuples(st.just("boundary"), st.just(0), st.just(0)),
+    ),
+    min_size=1, max_size=64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(OPS)
+def test_random_churn_respects_invariants(ops):
+    sched, submit_order, admit_order = _drive(ops)
+    assert len(sched.shapes_touched) <= LADDER.n_buckets
+    assert sched.shapes_touched <= {(r, a) for r in LADDER.row_buckets
+                                    for a in LADDER.atom_buckets}
+    for atoms in LADDER.atom_buckets:
+        expected = [rid for rid in submit_order[atoms]
+                    if sched.records[rid].status != CANCELLED
+                    or sched.records[rid].steps_done > 0]
+        # FIFO within the bucket: admitted exactly in submit order (no
+        # starvation: everyone not cancelled-in-queue was admitted)
+        assert admit_order[atoms] == expected
+    for rec in sched.records.values():
+        assert rec.status in TERMINAL
+        if rec.status == DONE:
+            assert rec.steps_done >= rec.requested_steps
+            assert rec.steps_done == rec.budget_steps
+
+
+@settings(max_examples=25, deadline=None)
+@given(OPS)
+def test_random_churn_with_faults_still_drains(ops):
+    sched, _, _ = _drive(ops, fault_every=3)
+    for rec in sched.records.values():
+        assert rec.status in TERMINAL
+        if rec.status == FAILED:
+            assert isinstance(rec.error, RuntimeError)
+
+
+# ---- deterministic corners (run even without hypothesis) -------------------
+
+def test_budget_rounds_to_blocks_and_fifo_order():
+    sched = SimScheduler(LADDER, block_steps=BLOCK)
+    rids = [sched.submit(60, 25) for _ in range(5)]   # atoms rung 64
+    assert all(sched.records[r].budget_steps == 30 for r in rids)
+    adms = sched.tick()                  # rows_for(5) -> clamped to 4
+    assert [a.rid for a in adms] == rids[:4]
+    assert adms[0].shape == (4, 64)
+    for _ in range(3):                   # 3 blocks retire the first four
+        sched.advance((4, 64))
+    for rid in sched.finished((4, 64)):
+        sched.release(rid)
+    adms2 = sched.tick()                 # the straggler takes a freed row
+    assert [a.rid for a in adms2] == rids[4:]
+
+
+def test_table_closes_when_drained_and_reopens_sized_to_demand():
+    sched = SimScheduler(LADDER, block_steps=BLOCK)
+    r0 = sched.submit(100, 10)
+    sched.tick()
+    sched.advance((1, 128))
+    assert sched.finished((1, 128)) == [r0]
+    sched.release(r0)
+    assert (1, 128) not in sched.tables   # empty + no queue -> closed
+    for _ in range(3):
+        sched.submit(100, 10)
+    [adm, *rest] = sched.tick()           # reopens at the 4-row rung
+    assert adm.shape == (4, 128) and len(rest) == 2
+    assert sched.shapes_touched == {(1, 128), (4, 128)}
+
+
+def test_cancel_semantics():
+    sched = SimScheduler(BucketLadder(row_buckets=(1,),
+                                      atom_buckets=(64,)), BLOCK)
+    r0 = sched.submit(10, 10)
+    r1 = sched.submit(10, 10)
+    sched.tick()
+    assert sched.cancel(r1) == CANCELLED          # dequeued immediately
+    assert sched.cancel(r0) == "running"          # flagged for boundary
+    assert sched.finished((1, 64)) == [r0]
+    rec = sched.release(r0)
+    assert rec.status == CANCELLED
+
+
+def test_rejects_oversized_and_bad_args():
+    sched = SimScheduler(LADDER, block_steps=BLOCK)
+    with pytest.raises(ValueError, match="atom bucket"):
+        sched.submit(10_000, 10)
+    with pytest.raises(ValueError, match="n_steps"):
+        sched.submit(10, 0)
+    with pytest.raises(ValueError):
+        BucketLadder(row_buckets=(4, 2))
